@@ -1,0 +1,43 @@
+"""Roofline summary: reads the dry-run JSONs (experiments/dryrun/) and
+emits the per-(arch x shape x mesh) three-term table for EXPERIMENTS.md
+§Roofline.  Run the dry-run first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run(dryrun_dir: str = "experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        base = {"dataset": f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+                           f"|{rec.get('tag', 'baseline')}"}
+        if rec.get("skipped"):
+            rows.append({**base, "status": "SKIP",
+                         "reason": rec["skip_reason"][:60]})
+            continue
+        if not rec.get("ok"):
+            rows.append({**base, "status": "FAIL",
+                         "error": str(rec.get("error", ""))[:80]})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            **base, "status": "OK",
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "bound": r["bound"],
+            "roofline_fraction": r["roofline_fraction"],
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "fits_16GB": rec["memory"]["fits_16GB"],
+            "GiB_per_chip": rec["memory"]["per_chip_live_bytes"] / 2**30,
+        })
+    if not rows:
+        rows.append({"dataset": "-", "status": "NO_DRYRUN_DATA",
+                     "hint": "run: python -m repro.launch.dryrun --all"})
+    return rows

@@ -1,0 +1,75 @@
+"""Render the §Dry-run / §Roofline markdown tables from
+experiments/dryrun/*.json and splice them into EXPERIMENTS.md (below the
+<!-- TABLES --> marker).
+
+  PYTHONPATH=src python benchmarks/render_tables.py [--write]
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(mesh: str, tag: str) -> dict:
+    rows = {}
+    for p in sorted(glob.glob(f"experiments/dryrun/*__{mesh}__{tag}.json")):
+        r = json.load(open(p))
+        rows[(r["arch"], r["shape"])] = r
+    return rows
+
+
+def fmt_cell(r: dict) -> list[str]:
+    if r.get("skipped"):
+        return ["SKIP", "-", "-", "-", "-", "-", "-"]
+    if not r.get("ok"):
+        return ["FAIL", "-", "-", "-", "-", "-", "-"]
+    rl = r["roofline"]
+    return [
+        "ok",
+        f"{rl['compute_s']:.2e}", f"{rl['memory_s']:.2e}",
+        f"{rl['collective_s']:.2e}", rl["bound"],
+        f"{rl['roofline_fraction']:.3f}",
+        f"{r['memory']['per_chip_live_bytes']/2**30:.1f}"
+        + ("✓" if r["memory"]["fits_16GB"] else "✗"),
+    ]
+
+
+def table(mesh: str, tag: str) -> str:
+    rows = load(mesh, tag)
+    if not rows:
+        return f"*(no data for {mesh}/{tag})*\n"
+    out = [f"### {mesh} — tag `{tag}`\n",
+           "| arch | shape | st | compute_s | memory_s | collective_s |"
+           " bound | roofline_frac | GiB/chip (fits) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(rows.items()):
+        out.append("| " + " | ".join([arch, shape] + fmt_cell(r)) + " |")
+    ok = sum(1 for r in rows.values() if r.get("ok") and not r.get("skipped"))
+    skip = sum(1 for r in rows.values() if r.get("skipped"))
+    fail = sum(1 for r in rows.values() if not r.get("ok"))
+    out.append(f"\n{ok} compiled, {skip} documented skips, {fail} failures "
+               f"out of {len(rows)} cells.\n")
+    return "\n".join(out)
+
+
+def main():
+    parts = []
+    for mesh, tag in (("16x16", "baseline"), ("16x16", "opt"),
+                      ("2x16x16", "baseline"), ("2x16x16", "opt")):
+        parts.append(table(mesh, tag))
+    text = "\n".join(parts)
+    if "--write" in sys.argv:
+        md = open("EXPERIMENTS.md").read()
+        marker = "<!-- TABLES -->"
+        md = md.split(marker)[0] + marker + "\n\n" + text
+        open("EXPERIMENTS.md", "w").write(md)
+        print("EXPERIMENTS.md updated")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

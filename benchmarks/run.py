@@ -1,0 +1,69 @@
+"""Benchmark runner: one section per paper figure/table + framework
+benches.  Emits ``bench,dataset,metric,value`` CSV to stdout and a JSON
+dump under experiments/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --quick    # storage figs only
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the subprocess/mesh + kernel benches")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args()
+
+    from benchmarks import bench_storage_figs as figs
+
+    sections = [
+        ("table1_capacity", figs.table1_capacity),
+        ("fig5_access_characterization", figs.fig5_access_characterization),
+        ("fig6_breakdown", figs.fig6_breakdown),
+        ("fig7_gpu_idle", figs.fig7_gpu_idle),
+        ("fig10_transfer_reduction", figs.fig10_transfer_reduction),
+        ("fig14_single_worker", figs.fig14_single_worker),
+        ("fig15_coalescing", figs.fig15_coalescing),
+        ("fig16_17_multiworker", figs.fig16_17_multiworker),
+        ("fig18_e2e", figs.fig18_e2e),
+        ("fig19_fpga", figs.fig19_fpga),
+        ("fig20_graphsaint", figs.fig20_graphsaint),
+        ("fig21_sampling_rate", figs.fig21_sampling_rate),
+    ]
+    if not args.quick:
+        from benchmarks import bench_isp_collectives, bench_kernels
+        from benchmarks import bench_roofline
+        sections += [
+            ("isp_collectives_onmesh", bench_isp_collectives.run),
+            ("kernels", bench_kernels.run),
+            ("roofline_summary", bench_roofline.run),
+        ]
+
+    print("bench,dataset,metric,value")
+    all_rows = {}
+    for name, fn in sections:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001 — report, keep running
+            rows = [{"dataset": "-", "error": f"{type(e).__name__}: {e}"}]
+        emit([dict(r) for r in rows], name)
+        all_rows[name] = {"rows": rows, "seconds": round(time.time() - t0, 2)}
+
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "results.json"), "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    print(f"# wrote {os.path.join(args.out, 'results.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing (atomic + async + mesh-elastic)."""
+
+from repro.checkpoint.store import (AsyncSaver, latest_step, list_steps,
+                                    prune, restore, save)

@@ -1,0 +1,21 @@
+"""SmartSAGE core: the paper's contribution as composable JAX modules.
+
+graph      — CSR graphs, R-MAT base + Kronecker fractal expansion (Table I)
+sampler    — GraphSAGE Algorithm 1 / GraphSAINT walks (+ access traces)
+gnn        — GraphSAGE aggregate/convolve backend (dense fixed-fanout)
+partition  — contiguous node-range partitioning for the mesh
+isp        — near-data sharded sampling/gather (the ISP architecture)
+pipeline   — producer-consumer loop w/ straggler mitigation (Fig. 4/7)
+"""
+
+from repro.core.graph import (CSRGraph, DATASETS, attach_features,
+                              edges_to_csr, kronecker_expand, load_dataset,
+                              rmat_graph)
+from repro.core.gnn import GNNConfig, GraphSAGE, gnn_loss_fn
+from repro.core.isp import ISPGraph, build_isp_train_step
+from repro.core.partition import PartitionedGraph, partition_graph
+from repro.core.pipeline import (PipelineStats, ProducerConsumerPipeline,
+                                 make_host_producer)
+from repro.core.sampler import (DEFAULT_FANOUTS, SampleTrace, sample_khop,
+                                sample_khop_jax, sample_one_hop_jax,
+                                saint_random_walk)

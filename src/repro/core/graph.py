@@ -1,0 +1,198 @@
+"""Graph data structures and synthetic dataset generation.
+
+The paper's datasets (Table I) are CSR graphs: a neighbor edge-list array
+(``indices``) indexed by ``indptr``, plus a per-node feature table.  Real
+web-scale graphs don't fit this container, so — exactly like the paper — we
+generate graphs with an R-MAT power-law base and grow them with **Kronecker
+fractal expansion** (Belletti et al. [7]), which preserves the power-law
+degree distribution and the densification power law (edges grow faster than
+nodes) while scaling node/edge counts multiplicatively.
+
+Everything here is numpy (host-side): in the paper's system this data lives
+on the *storage tier*, not the accelerator.  ``repro.storage`` replays the
+samplers' access traces against device models; ``core.isp`` moves the same
+structures onto the mesh as padded device arrays for near-data sampling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    """Compressed-sparse-row graph + node features/labels.
+
+    indptr:   (N+1,) int64 — neighbor list offsets into ``indices``.
+    indices:  (E,)   int32 — the neighbor edge-list array (the paper's
+              memory-capacity-dominant structure; 8 B per entry in the
+              paper's 64-bit layout, int32 here: documented constant).
+    features: (N, F) float32 — the feature table.
+    labels:   (N,)   int32 — node classification targets.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    features: np.ndarray | None = None
+    labels: np.ndarray | None = None
+    name: str = "graph"
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def feat_dim(self) -> int:
+        return 0 if self.features is None else int(self.features.shape[1])
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def neighbors(self, u: int) -> np.ndarray:
+        return self.indices[self.indptr[u]:self.indptr[u + 1]]
+
+    # -- storage-layout views (used by the storage simulator) ---------------
+    def edge_list_nbytes(self, entry_bytes: int = 8) -> int:
+        """Size of the neighbor edge-list array on storage (paper: 8 B/entry)."""
+        return self.num_edges * entry_bytes
+
+    def edge_byte_range(self, u: int, entry_bytes: int = 8) -> tuple[int, int]:
+        """Byte extent of node u's neighbor list within the edge-list file."""
+        return (int(self.indptr[u]) * entry_bytes,
+                int(self.indptr[u + 1]) * entry_bytes)
+
+    def validate(self) -> None:
+        assert self.indptr[0] == 0 and self.indptr[-1] == self.num_edges
+        assert np.all(np.diff(self.indptr) >= 0)
+        if self.num_edges:
+            assert self.indices.min() >= 0
+            assert self.indices.max() < self.num_nodes
+        if self.features is not None:
+            assert self.features.shape[0] == self.num_nodes
+        if self.labels is not None:
+            assert self.labels.shape[0] == self.num_nodes
+
+
+def _dedup_sort_edges(src: np.ndarray, dst: np.ndarray, n: int):
+    """Drop self-loops + duplicate edges; return sorted (src, dst)."""
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    key = src.astype(np.int64) * n + dst
+    key = np.unique(key)
+    return (key // n).astype(np.int64), (key % n).astype(np.int32)
+
+
+def edges_to_csr(src, dst, n: int, *, features=None, labels=None,
+                 name="graph", symmetric: bool = True) -> CSRGraph:
+    if symmetric:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    src, dst = _dedup_sort_edges(np.asarray(src, np.int64),
+                                 np.asarray(dst, np.int64), n)
+    counts = np.bincount(src, minlength=n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    g = CSRGraph(indptr=indptr, indices=dst.astype(np.int32),
+                 features=features, labels=labels, name=name)
+    g.validate()
+    return g
+
+
+def rmat_graph(n_nodes: int, n_edges: int, *, seed: int = 0,
+               a: float = 0.57, b: float = 0.19, c: float = 0.19,
+               name: str = "rmat") -> CSRGraph:
+    """R-MAT power-law generator (the standard Kronecker-style base graph)."""
+    rng = np.random.default_rng(seed)
+    scale = int(np.ceil(np.log2(max(2, n_nodes))))
+    n = 1 << scale
+    probs = np.array([a, b, c, 1.0 - a - b - c])
+    src = np.zeros(n_edges, np.int64)
+    dst = np.zeros(n_edges, np.int64)
+    for level in range(scale):
+        q = rng.choice(4, size=n_edges, p=probs)
+        src += ((q >> 1) & 1).astype(np.int64) << level
+        dst += (q & 1).astype(np.int64) << level
+    src, dst = src % n_nodes, dst % n_nodes
+    return edges_to_csr(src, dst, n_nodes, name=name)
+
+
+def kronecker_expand(g: CSRGraph, factor: int, *, seed: int = 0,
+                     edge_keep: float = 1.0, name: str | None = None
+                     ) -> CSRGraph:
+    """Kronecker fractal expansion: G' = G (x) K_factor.
+
+    Node u of the base graph becomes ``factor`` replicas ``u*factor + r``;
+    each base edge (u, v) expands toward ``factor^2`` replica pairs
+    (subsampled by ``edge_keep``).  Nodes grow x factor while edges grow
+    x (factor^2 * edge_keep) — with edge_keep > 1/factor this reproduces the
+    densification power law the paper requires (higher average degree at
+    larger scale; Fig. 13), and the degree distribution stays power-law
+    since every base degree is multiplied by the same expansion factor.
+    """
+    rng = np.random.default_rng(seed)
+    n2 = g.num_nodes * factor
+    base_src = np.repeat(np.arange(g.num_nodes, dtype=np.int64),
+                         g.degrees())
+    base_dst = g.indices.astype(np.int64)
+    n_pairs = int(factor * factor * edge_keep)
+    srcs, dsts = [], []
+    for _ in range(max(1, n_pairs)):
+        r1 = rng.integers(0, factor, size=base_src.shape[0])
+        r2 = rng.integers(0, factor, size=base_src.shape[0])
+        srcs.append(base_src * factor + r1)
+        dsts.append(base_dst * factor + r2)
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    return edges_to_csr(src, dst, n2, name=name or (g.name + f"-kron{factor}"),
+                        symmetric=False)
+
+
+def attach_features(g: CSRGraph, feat_dim: int, n_classes: int = 41,
+                    *, seed: int = 0) -> CSRGraph:
+    rng = np.random.default_rng(seed)
+    g.features = rng.standard_normal((g.num_nodes, feat_dim),
+                                     dtype=np.float32)
+    g.labels = rng.integers(0, n_classes, g.num_nodes, dtype=np.int32)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Dataset registry — Table I, geometrically scaled to CPU-testable size.
+# ---------------------------------------------------------------------------
+# Per dataset: (base nodes, base edges, feature dim, Kronecker factor,
+# edge_keep).  The in-memory variant is the base; the large-scale variant is
+# its fractal expansion — same *relationship* as the paper's Table I
+# (large-scale has more nodes AND higher average degree).  Absolute scale is
+# divided by ~2^13 so the full pipeline runs on 1 CPU; the storage simulator
+# extrapolates capacity numbers with the real Table I sizes (storage/specs).
+
+DATASETS = {
+    #                nodes, edges, feat, kron, keep
+    "reddit":      (1 << 10, 1 << 14, 602, 8, 0.40),
+    "movielens":   (1 << 11, 1 << 15, 256, 4, 0.60),
+    "amazon":      (1 << 12, 1 << 15, 32, 8, 0.30),
+    "ogbn-100m":   (1 << 12, 1 << 15, 32, 4, 0.50),
+    "protein-pi":  (1 << 10, 1 << 14, 512, 4, 0.55),
+}
+
+# Paper Table I absolute sizes (GB of graph data) — used by storage/specs to
+# report capacity feasibility at true scale.
+TABLE1_LARGE_SCALE_GB = {
+    "reddit": 402, "movielens": 442, "amazon": 75, "ogbn-100m": 41,
+    "protein-pi": 66,
+}
+
+
+def load_dataset(name: str, *, large_scale: bool = False,
+                 seed: int = 0) -> CSRGraph:
+    nodes, edges, feat, kron, keep = DATASETS[name]
+    g = rmat_graph(nodes, edges, seed=seed, name=f"{name}-inmem")
+    if large_scale:
+        g = kronecker_expand(g, kron, seed=seed + 1, edge_keep=keep,
+                             name=f"{name}-large")
+    return attach_features(g, feat, seed=seed + 2)

@@ -1,0 +1,154 @@
+"""Producer-consumer training pipeline (paper Fig. 4) with straggler
+mitigation and backpressure.
+
+CPU-side producer workers generate subgraph minibatches (sample + feature
+gather on the host graph — the data-preparation stage) into a bounded work
+queue; the consumer (the jitted device step) drains it.  The pipeline
+records the consumer-idle fraction — the paper's Fig. 7 "GPU idle time"
+metric — which is how the throughput mismatch between data preparation and
+training is quantified.
+
+Straggler mitigation: each batch task carries a deadline; if a worker
+hasn't produced it in ``straggler_factor`` × the EWMA production time, the
+task is re-issued to another worker and the first result wins (batches are
+keyed by index, so duplicates are dropped).  This is the large-scale
+analogue of a slow/failed data-preparation node.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.core.sampler import DEFAULT_FANOUTS, sample_khop
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    batches: int = 0
+    consumer_idle_s: float = 0.0
+    consumer_busy_s: float = 0.0
+    produce_times: list = dataclasses.field(default_factory=list)
+    reissued: int = 0
+    duplicates_dropped: int = 0
+
+    @property
+    def idle_fraction(self) -> float:
+        total = self.consumer_idle_s + self.consumer_busy_s
+        return self.consumer_idle_s / total if total > 0 else 0.0
+
+
+def make_host_producer(g: CSRGraph, batch_size: int,
+                       fanouts=DEFAULT_FANOUTS) -> Callable[[int], dict]:
+    """Returns produce(batch_idx) -> minibatch dict of numpy arrays."""
+
+    def produce(batch_idx: int) -> dict:
+        rng = np.random.default_rng(batch_idx)
+        targets = rng.integers(0, g.num_nodes, batch_size).astype(np.int32)
+        trace = sample_khop(g, targets, fanouts, seed=batch_idx)
+        hop_feats = [g.features[h] for h in trace.hops]
+        labels = g.labels[targets]
+        return {"hop_feats": hop_feats, "labels": labels,
+                "targets": targets}
+
+    return produce
+
+
+class ProducerConsumerPipeline:
+    """Bounded-queue pipeline: n_workers producer threads + caller-driven
+    consumer.  ``produce_fn(batch_idx) -> batch``; consumption order is
+    strictly by batch index (training determinism is per-batch-seed)."""
+
+    def __init__(self, produce_fn: Callable[[int], dict], *,
+                 n_workers: int = 4, queue_depth: int = 8,
+                 straggler_factor: float = 4.0,
+                 produce_delay_s: float = 0.0):
+        self.produce_fn = produce_fn
+        self.n_workers = n_workers
+        self.straggler_factor = straggler_factor
+        self.produce_delay_s = produce_delay_s   # simulated slow storage tier
+        self.stats = PipelineStats()
+        self._tasks: queue.Queue = queue.Queue()
+        self._results: dict[int, dict] = {}
+        self._results_lock = threading.Condition()
+        self._issued: dict[int, float] = {}
+        self._stop = threading.Event()
+        self._queue_depth = queue_depth
+        self._next_issue = 0
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True)
+            for _ in range(n_workers)]
+        for t in self._threads:
+            t.start()
+
+    # -- producer side -------------------------------------------------------
+    def _worker(self):
+        while not self._stop.is_set():
+            try:
+                idx = self._tasks.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            t0 = time.perf_counter()
+            if self.produce_delay_s:
+                time.sleep(self.produce_delay_s)
+            batch = self.produce_fn(idx)
+            dt = time.perf_counter() - t0
+            with self._results_lock:
+                if idx in self._results:
+                    self.stats.duplicates_dropped += 1
+                else:
+                    self._results[idx] = batch
+                    self.stats.produce_times.append(dt)
+                self._results_lock.notify_all()
+
+    def _ensure_issued(self, upto: int):
+        while self._next_issue <= upto + self._queue_depth - 1:
+            self._tasks.put(self._next_issue)
+            self._issued[self._next_issue] = time.perf_counter()
+            self._next_issue += 1
+
+    def _maybe_reissue(self, idx: int):
+        times = self.stats.produce_times
+        if len(times) < 2:
+            return
+        ewma = float(np.mean(times[-8:]))
+        deadline = self.straggler_factor * max(ewma, 1e-4)
+        if time.perf_counter() - self._issued.get(idx, 0) > deadline:
+            self._tasks.put(idx)                      # re-issue; first wins
+            self._issued[idx] = time.perf_counter()
+            self.stats.reissued += 1
+
+    # -- consumer side -------------------------------------------------------
+    def get_batch(self, idx: int, timeout: float = 30.0) -> dict:
+        self._ensure_issued(idx)
+        t0 = time.perf_counter()
+        with self._results_lock:
+            while idx not in self._results:
+                self._results_lock.wait(timeout=0.02)
+                self._maybe_reissue(idx)
+                if time.perf_counter() - t0 > timeout:
+                    raise TimeoutError(f"batch {idx} not produced")
+            batch = self._results.pop(idx)
+        self.stats.consumer_idle_s += time.perf_counter() - t0
+        return batch
+
+    def run(self, consume_fn: Callable[[dict], None], n_batches: int):
+        """Drive the full loop; consume_fn is the device step."""
+        for i in range(n_batches):
+            batch = self.get_batch(i)
+            t0 = time.perf_counter()
+            consume_fn(batch)
+            self.stats.consumer_busy_s += time.perf_counter() - t0
+            self.stats.batches += 1
+        return self.stats
+
+    def close(self):
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=1.0)

@@ -1,0 +1,135 @@
+"""Neighbor sampling — the paper's Algorithm 1 and the GraphSAINT variant.
+
+Two synchronized implementations:
+
+* **numpy host samplers** (`sample_khop`, `saint_random_walk`): the
+  reference algorithm.  They also emit the *access trace* — which nodes'
+  neighbor lists were touched, in order — which is exactly the request
+  stream the storage simulator replays against the mmap / direct-I/O / ISP
+  device models.  One trace, many device models: the algorithmic event
+  counts are real, only time-per-event uses device constants.
+
+* **JAX samplers** (`sample_khop_jax`): the same math as fixed-shape XLA
+  ops (uniform-with-replacement fanout sampling), used on-mesh by the
+  near-data ISP path (`core/isp.py`) and as the oracle for the Pallas
+  ``neighbor_sample`` kernel.
+
+Sampling semantics: uniform with replacement among each node's neighbors
+(standard GraphSAGE default; nodes with no neighbors sample themselves —
+self-loop fallback — so shapes stay static).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import CSRGraph
+
+DEFAULT_FANOUTS = (25, 10)   # paper default: 25 then 10 per layer
+
+
+@dataclasses.dataclass
+class SampleTrace:
+    """Storage-access record of one mini-batch's subgraph generation.
+
+    ``touched_nodes``: every node whose neighbor list was read, in request
+    order (the unit the block device serves).  ``sampled``: per-hop dense
+    node-ID tensors.  ``subgraph_nodes``: unique node IDs whose features the
+    aggregation stage will gather.
+    """
+
+    touched_nodes: np.ndarray
+    hops: list[np.ndarray]
+    subgraph_nodes: np.ndarray
+
+    def sampled_ids_nbytes(self, entry_bytes: int = 8) -> int:
+        return sum(h.size for h in self.hops) * entry_bytes
+
+
+def _sample_one_hop(g: CSRGraph, frontier: np.ndarray, fanout: int,
+                    rng: np.random.Generator) -> np.ndarray:
+    """frontier: (..., ) -> (...,fanout) sampled neighbor ids (w/ replacement)."""
+    flat = frontier.reshape(-1)
+    deg = (g.indptr[flat + 1] - g.indptr[flat]).astype(np.int64)
+    r = rng.integers(0, np.maximum(deg, 1)[:, None],
+                     size=(flat.size, fanout))
+    idx = g.indptr[flat][:, None] + r
+    picked = g.indices[np.minimum(idx, g.num_edges - 1)]
+    picked = np.where(deg[:, None] > 0, picked, flat[:, None])  # self-loop fb
+    return picked.reshape(frontier.shape + (fanout,)).astype(np.int32)
+
+
+def sample_khop(g: CSRGraph, targets: np.ndarray,
+                fanouts=DEFAULT_FANOUTS, *, seed: int = 0) -> SampleTrace:
+    """GraphSAGE Algorithm 1, k hops.  hops[0]=targets (M,), hops[1]=(M,f1),
+    hops[2]=(M,f1,f2), ...  Every frontier node's neighbor list is one
+    storage request (the paper's per-target edge-list "chunk" fetch)."""
+    rng = np.random.default_rng(seed)
+    targets = np.asarray(targets, np.int32)
+    hops = [targets]
+    touched = [targets.reshape(-1)]
+    frontier = targets
+    for f in fanouts:
+        nxt = _sample_one_hop(g, frontier, f, rng)
+        hops.append(nxt)
+        frontier = nxt
+        if f != fanouts[-1]:
+            touched.append(nxt.reshape(-1))
+    touched_nodes = np.concatenate(touched)
+    subgraph = np.unique(np.concatenate([h.reshape(-1) for h in hops]))
+    return SampleTrace(touched_nodes=touched_nodes, hops=hops,
+                       subgraph_nodes=subgraph)
+
+
+def saint_random_walk(g: CSRGraph, roots: np.ndarray, walk_length: int = 4,
+                      *, seed: int = 0) -> SampleTrace:
+    """GraphSAINT random-walk sampler: a length-L walk from each root; the
+    union of visited nodes is the training subgraph.  Regular one-neighbor-
+    per-step access pattern (paper §VI-F)."""
+    rng = np.random.default_rng(seed)
+    roots = np.asarray(roots, np.int32)
+    cur = roots.copy()
+    visited = [roots]
+    touched = []
+    for _ in range(walk_length):
+        touched.append(cur.reshape(-1))
+        cur = _sample_one_hop(g, cur, 1, rng)[..., 0]
+        visited.append(cur)
+    walk = np.stack(visited, axis=1)                       # (M, L+1)
+    subgraph = np.unique(walk.reshape(-1))
+    return SampleTrace(touched_nodes=np.concatenate(touched),
+                       hops=[roots, walk], subgraph_nodes=subgraph)
+
+
+# ---------------------------------------------------------------------------
+# JAX samplers (fixed-shape; used on-mesh and as the Pallas kernel oracle)
+# ---------------------------------------------------------------------------
+
+def sample_one_hop_jax(indptr, indices, frontier, fanout: int, key):
+    """indptr: (N+1,) int32; indices: (E,) int32 (padded device copies).
+    frontier: (...,) int32.  Returns (..., fanout) int32."""
+    flat = frontier.reshape(-1)
+    start = jnp.take(indptr, flat)
+    deg = jnp.take(indptr, flat + 1) - start
+    r = jax.random.randint(key, (flat.shape[0], fanout), 0, 2**31 - 1)
+    r = r % jnp.maximum(deg[:, None], 1)
+    idx = start[:, None] + r
+    picked = jnp.take(indices, jnp.minimum(idx, indices.shape[0] - 1))
+    picked = jnp.where(deg[:, None] > 0, picked, flat[:, None])
+    return picked.reshape(frontier.shape + (fanout,)).astype(jnp.int32)
+
+
+def sample_khop_jax(indptr, indices, targets, fanouts=DEFAULT_FANOUTS, *,
+                    key):
+    """Dense k-hop sampling; returns list of per-hop id tensors."""
+    hops = [targets.astype(jnp.int32)]
+    frontier = hops[0]
+    for i, f in enumerate(fanouts):
+        frontier = sample_one_hop_jax(indptr, indices, frontier, f,
+                                      jax.random.fold_in(key, i))
+        hops.append(frontier)
+    return hops

@@ -1,0 +1,8 @@
+"""Data pipelines: synthetic LM tokens + graph minibatch production.
+
+Graph-side producer/consumer (bounded queue, straggler re-issue) lives in
+repro.core.pipeline; this package adds the LM token stream and shared
+loader conveniences.
+"""
+
+from repro.data.tokens import TokenPipeline

@@ -1,0 +1,79 @@
+"""Collective helpers used by shard_map regions.
+
+These wrap jax.lax collectives with the patterns the framework uses
+repeatedly:
+
+* ``online_softmax_combine`` — the near-data decode-attention reduction:
+  each shard holds partial (max, sum, weighted-V) statistics over its KV
+  slice; the combine is a numerically-stable cross-shard softmax merge done
+  with psum of rescaled partials.  Only O(heads×dim) bytes cross the link,
+  never the KV slice itself — the SmartSAGE "ship the subgraph, not the
+  edge list" principle applied to attention.
+
+* ``all_to_all_dispatch`` — MoE/subgraph dispatch: exchanges *selected*
+  rows only.
+
+* ``ring_allgather_kv`` — chunked KV all-gather via collective_permute for
+  overlap-friendly prefill attention (used by the context-parallel path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def online_softmax_combine(m_local, l_local, o_local, axis_name: str):
+    """Merge per-shard online-softmax partials across ``axis_name``.
+
+    Args:
+      m_local: (..., ) per-shard running max of logits.
+      l_local: (..., ) per-shard sum of exp(logits - m_local).
+      o_local: (..., d) per-shard sum of exp(logits - m_local) * V.
+
+    Returns the globally-normalized attention output (..., d).
+    """
+    m_global = lax.pmax(m_local, axis_name)
+    scale = jnp.exp(m_local - m_global)
+    l_scaled = l_local * scale
+    o_scaled = o_local * scale[..., None]
+    l_global = lax.psum(l_scaled, axis_name)
+    o_global = lax.psum(o_scaled, axis_name)
+    return o_global / jnp.maximum(l_global, 1e-30)[..., None]
+
+
+def all_to_all_dispatch(x, axis_name: str, *, split_axis: int, concat_axis: int,
+                        tiled: bool = True):
+    """Exchange selected rows across shards (MoE dispatch / subgraph exchange)."""
+    return lax.all_to_all(x, axis_name, split_axis=split_axis,
+                          concat_axis=concat_axis, tiled=tiled)
+
+
+def ring_allgather_kv(kv, axis_name: str):
+    """Ring all-gather of KV blocks via collective_permute.
+
+    Returns a list of per-step blocks so the caller can overlap each block's
+    attention compute with the next permute (software pipelining).  On TPU
+    this lowers to neighbor-to-neighbor ICI traffic instead of a monolithic
+    all-gather, enabling compute/comm overlap.
+    """
+    n = lax.axis_size(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    blocks = [kv]
+    cur = kv
+    for _ in range(n - 1):
+        cur = lax.ppermute(cur, axis_name, perm)
+        blocks.append(cur)
+    return blocks
+
+
+def psum_scatter(x, axis_name: str, *, scatter_dimension: int = 0, tiled: bool = True):
+    """reduce-scatter — ZeRO gradient sync primitive."""
+    return lax.psum_scatter(x, axis_name, scatter_dimension=scatter_dimension,
+                            tiled=tiled)
+
+
+def shard_offset(axis_name: str, shard_len: int):
+    """Global offset of this shard along a dim sharded by ``axis_name``."""
+    return lax.axis_index(axis_name) * shard_len

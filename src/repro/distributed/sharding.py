@@ -1,0 +1,185 @@
+"""Logical-axis sharding: the single place where "what a dimension means"
+is mapped to "which mesh axis shards it".
+
+Every parameter and activation in the framework is annotated with *logical*
+axis names (e.g. ``("vocab", "embed")``).  A ``ShardingRules`` table maps
+logical names to mesh axis names (or None = replicated).  This mirrors the
+MaxText/Flax "logical axis rules" design and is what makes the same model
+code run on a 1-device CPU mesh, a 256-chip pod, or a 512-chip 2-pod mesh
+without edits.
+
+Divisibility-aware resolution: a logical axis is only mapped onto a mesh
+axis if the dimension size is divisible by the mesh axis size; otherwise it
+falls back to replication (with an optional warning).  This is what lets
+e.g. an 8-way GQA KV-head dim stay replicated on a 16-way model axis while
+the 32-way Q-head dim shards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical axis vocabulary (documentation of intent):
+#   batch      — global batch; DP over ("pod", "data")
+#   fsdp       — weight-shard axis for ZeRO-style parameter sharding
+#   embed      — d_model / residual stream
+#   heads      — attention Q-head dim (tensor parallel)
+#   kv_heads   — KV head dim (tensor parallel when divisible)
+#   qkv        — per-head feature dim (never sharded)
+#   mlp        — FFN hidden dim (tensor parallel)
+#   vocab      — vocabulary dim (tensor parallel)
+#   experts    — MoE expert dim (expert parallel)
+#   seq        — sequence dim (context parallel in decode KV)
+#   kv_seq     — KV-cache sequence dim (sharded over model in decode)
+#   layers     — stacked-scan layer dim (never sharded)
+#   conv, state, ssm_head — mamba2 internals
+#   graph      — graph-partition axis (GNN; near-data sampling shards)
+#   nodes, feat — GNN node / feature dims
+
+DEFAULT_RULES: tuple[tuple[str, Any], ...] = (
+    ("batch", ("pod", "data")),
+    ("fsdp", "data"),
+    # "embed" annotates WEIGHT d_model dims -> fsdp-sharded over 'data'
+    # (ZeRO): every weight is sharded over BOTH mesh axes where divisible.
+    # Activations use "act_embed" (replicated d) since their batch dim
+    # already occupies 'data'.
+    ("embed", "data"),
+    ("act_embed", None),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("qkv", None),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("experts", "model"),
+    ("expert_mlp", None),
+    ("moe_group", ("pod", "data")),
+    ("seq", None),
+    ("kv_seq", "model"),
+    ("kv_batch", ("pod", "data")),
+    ("layers", None),
+    ("conv", None),
+    ("state", None),
+    ("ssm_head", "model"),
+    ("graph", "data"),
+    ("nodes", None),
+    ("feat", None),
+    ("gnn_in", None),
+    ("gnn_hidden", "model"),
+    ("enc_seq", None),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Maps logical axis names -> mesh axis name(s) or None."""
+
+    rules: Mapping[str, Any]
+
+    @classmethod
+    def default(cls, overrides: Mapping[str, Any] | None = None) -> "ShardingRules":
+        table = dict(DEFAULT_RULES)
+        if overrides:
+            table.update(overrides)
+        return cls(rules=table)
+
+    def mesh_axes(self, logical: str) -> Any:
+        if logical is None:
+            return None
+        if logical not in self.rules:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return self.rules[logical]
+
+
+def _axis_size(mesh: Mesh, mesh_axes: Any) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        return mesh.shape.get(mesh_axes, 1)
+    size = 1
+    for a in mesh_axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def _present(mesh: Mesh, mesh_axes: Any) -> Any:
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' single-pod)."""
+    if mesh_axes is None:
+        return None
+    if isinstance(mesh_axes, str):
+        return mesh_axes if mesh_axes in mesh.shape else None
+    kept = tuple(a for a in mesh_axes if a in mesh.shape)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def logical_to_spec(
+    logical_axes: Sequence[str | None],
+    rules: ShardingRules,
+    mesh: Mesh,
+    dim_sizes: Sequence[int] | None = None,
+) -> P:
+    """Resolve logical axes -> PartitionSpec, respecting divisibility.
+
+    If ``dim_sizes`` is given, any mapping whose mesh-axis product does not
+    divide the dimension size falls back to replication for that dim.  Also
+    guarantees no mesh axis is used twice in one spec (first use wins).
+    """
+    used: set[str] = set()
+    out = []
+    for i, lax_name in enumerate(logical_axes):
+        mesh_axes = _present(mesh, rules.mesh_axes(lax_name)) if lax_name else None
+        if mesh_axes is not None:
+            axes_tuple = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+            if any(a in used for a in axes_tuple):
+                mesh_axes = None
+            elif dim_sizes is not None:
+                size = _axis_size(mesh, mesh_axes)
+                if dim_sizes[i] % size != 0:
+                    mesh_axes = None
+            if mesh_axes is not None:
+                used.update(axes_tuple)
+        out.append(mesh_axes)
+    # Trim trailing Nones (canonical form).
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(
+    logical_axes: Sequence[str | None],
+    rules: ShardingRules,
+    mesh: Mesh,
+    dim_sizes: Sequence[int] | None = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_axes, rules, mesh, dim_sizes))
+
+
+def tree_shardings(spec_tree, rules: ShardingRules, mesh: Mesh, shape_tree=None):
+    """Map a pytree of logical-axis tuples (+ optional matching shapes) to
+    a pytree of NamedShardings."""
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda axes: named_sharding(axes, rules, mesh),
+            spec_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x),
+        )
+    return jax.tree.map(
+        lambda axes, shape: named_sharding(axes, rules, mesh, shape),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def constrain(x, logical_axes: Sequence[str | None], rules: ShardingRules, mesh: Mesh):
+    """with_sharding_constraint via logical names (no-op off-mesh dims)."""
+    spec = logical_to_spec(logical_axes, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

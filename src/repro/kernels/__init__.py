@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec), a jit'd
+wrapper in ops.py, and a pure-jnp oracle in ref.py; tests sweep
+shapes/dtypes asserting allclose in interpret mode (this container is
+CPU-only; TPU is the compile target).
+"""
+
+from repro.kernels import ops, ref

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: blocked online-softmax decode attention (flash-
+decode), the serve_step hot spot for every attention arch's decode cells.
+
+One new token attends over a long KV cache.  The cache is streamed through
+VMEM in (BLOCK_S, Hkv, D) tiles along the sequence; running (max, sum,
+weighted-V) accumulators live in VMEM scratch across the sequential inner
+grid dimension and the normalized output is written on the last tile —
+identical math to the per-shard body of the near-data sharded decode
+attention (models/attention.py), so shard-local compute can swap this in
+on real hardware.
+
+Grid: (B, S // BLOCK_S); scratch: m/l (Hq,), o (Hq, D) fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(valid_ref, window_ref, q_ref, k_ref, v_ref, out_ref,
+            m_ref, l_ref, o_ref, *, block_s: int, group: int):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    valid_len = valid_ref[0]
+    window = window_ref[0]
+    q = q_ref[0].astype(jnp.float32)                    # (Hq, D)
+    k = k_ref[0].astype(jnp.float32)                    # (BLOCK_S, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    Hq, D = q.shape
+    Hkv = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+
+    qg = q.reshape(Hkv, group, D)
+    s = jnp.einsum("hgd,shd->hgs", qg, k) * scale       # (Hkv, g, BLOCK_S)
+    kpos = j * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)[0]
+    ok = kpos < valid_len
+    ok = ok & jnp.where(window > 0, kpos >= valid_len - window, True)
+    s = jnp.where(ok[None, None, :], s, NEG_INF)
+    s = s.reshape(Hq, block_s)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    pv = jnp.einsum("hgs,shd->hgd", p.reshape(Hkv, group, block_s), v)
+    o_ref[...] = o_ref[...] * corr[:, None] + pv.reshape(Hq, D)
+    m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        out_ref[0] = (o_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                      ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k, v, valid_len, window=0, *, block_s: int = 256,
+                     interpret: bool = True):
+    """q: (B, Hq, D); k/v: (B, S, Hkv, D); valid_len: scalar int32;
+    window: scalar int32 (<=0 full).  Returns (B, Hq, D) in q.dtype."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    group = Hq // Hkv
+    block_s = min(block_s, S)
+    assert S % block_s == 0, (S, block_s)
+    valid = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_kernel, block_s=block_s, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,          # valid_len, window
+            grid=(B, S // block_s),
+            in_specs=[
+                pl.BlockSpec((1, Hq, D), lambda b, j, *_: (b, 0, 0)),
+                pl.BlockSpec((1, block_s, Hkv, D),
+                             lambda b, j, *_: (b, j, 0, 0)),
+                pl.BlockSpec((1, block_s, Hkv, D),
+                             lambda b, j, *_: (b, j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, Hq, D), lambda b, j, *_: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((Hq,), jnp.float32),
+                pltpu.VMEM((Hq,), jnp.float32),
+                pltpu.VMEM((Hq, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        interpret=interpret,
+    )(valid, win, q, k, v)

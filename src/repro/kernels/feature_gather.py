@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused feature gather + fanout-mean aggregate.
+
+The GNN data-preparation hot spot (paper Fig. 1 steps ②-③): for each
+target, gather its K sampled neighbors' feature rows from the (possibly
+huge) feature table and mean-reduce them.
+
+TPU adaptation (DESIGN.md §2/§5): a GPU implementation would do warp-level
+gathers; on TPU the idiomatic form is *scalar-prefetched dynamic block
+indexing* — the sampled IDs are prefetched into SMEM and used inside the
+table's BlockSpec ``index_map``, so the Pallas pipeline DMAs exactly the
+needed (1, F) feature row from HBM into VMEM per grid step.  The mean
+accumulates in the output block across the inner (fanout) grid dim; no
+(M, K, F) intermediate ever materializes — the same "ship the reduction,
+not the raw rows" principle as the paper's ISP unit.
+
+Grid: (M_blocks, K).  Block shapes: table row tile (1, F_pad), output tile
+(1, F_pad) revisited K times (accumulate), ids in SMEM via scalar prefetch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, table_ref, out_ref, *, K: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += table_ref[...].astype(out_ref.dtype) / K
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def feature_gather_mean(table, ids, *, interpret: bool = True):
+    """table: (N, F); ids: (M, K) int32 -> (M, F) mean of gathered rows."""
+    N, F = table.shape
+    M, K = ids.shape
+
+    grid = (M, K)
+    kernel = functools.partial(_kernel, K=K)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # one feature row per grid step, row chosen by prefetched id
+                pl.BlockSpec((1, F), lambda m, k, ids: (ids[m, k], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, F), lambda m, k, ids: (m, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, F), jnp.float32),
+        interpret=interpret,
+    )(ids, table)
+    return out.astype(table.dtype)

@@ -1,0 +1,268 @@
+"""Pallas TPU kernel: flash attention for TRAINING (fwd + custom-VJP bwd).
+
+The §Roofline analysis shows dense train cells are bound by fp32
+attention-score HBM traffic (~87% of qwen2-0.5b's memory term): XLA
+materializes every (block_q, block_k) score/probability block. This
+kernel keeps the blocks in VMEM: HBM sees only q/k/v/o (+ the (S,)
+logsumexp residual), which is the projected memory-term reduction
+recorded in EXPERIMENTS.md §Perf.
+
+Layout: (B, H, S, D) (the ops wrapper transposes from the model's
+(B, S, H, D)). GQA without KV copies: the k/v BlockSpec index_map sends
+query-head h to kv-head h // group.
+
+Forward:  grid (B, Hq, nq, nk), nk innermost sequential; m/l/acc scratch.
+          Saves L = m + log(l) per query row for the backward.
+Backward: recompute p = exp(qk - L) blockwise;
+          dv/dk kernel: grid (B, Hq, nk, nq) accumulates over query blocks
+          (gqa-grouped dk/dv are summed by the wrapper);
+          dq kernel:    grid (B, Hq, nq, nk) accumulates over kv blocks,
+          using delta = rowsum(dout * out) (computed in jnp).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mask(iq, ik, bq, bk, causal: bool):
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    return (qpos >= kpos) if causal else jnp.ones((bq, bk), jnp.bool_)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_s, l_s, acc_s, *,
+                bq: int, bk: int, causal: bool, scale: float):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_mask(pl.program_id(2), ik, bq, bk, causal), s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + p.sum(axis=-1)
+    acc_s[...] = acc_s[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0, 0] = (acc_s[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_s[...] + jnp.log(l)
+
+
+def _flash_fwd(q, k, v, *, bq, bk, causal, scale, interpret):
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    nq, nk = S // bq, S // bk
+    kernel = functools.partial(_fwd_kernel, bq=bq, bk=bk, causal=causal,
+                               scale=scale)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=(B, Hq, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+                pl.BlockSpec((1, 1, bk, D),
+                             lambda b, h, iq, ik: (b, h // group, ik, 0)),
+                pl.BlockSpec((1, 1, bk, D),
+                             lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+                pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+            ],
+            scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                            pltpu.VMEM((bq,), jnp.float32),
+                            pltpu.VMEM((bq, D), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+                   jax.ShapeDtypeStruct((B, Hq, S), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_s, dv_s, *, bq, bk, causal, scale):
+    iq = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_s[...] = jnp.zeros_like(dk_s)
+        dv_s[...] = jnp.zeros_like(dv_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)                # (bq, D)
+    lse = lse_ref[0, 0]                                  # (bq,)
+    delta = delta_ref[0, 0]                              # (bq,)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_mask(iq, pl.program_id(2), bq, bk, causal), s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                        # (bq, bk)
+    dv_s[...] += jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None]) * scale
+    dk_s[...] += jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+
+    @pl.when(iq == nq - 1)
+    def _done():
+        dk_ref[0, 0] = dk_s[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_s[...].astype(dv_ref.dtype)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, dq_s, *, bq, bk, causal, scale):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_s[...] = jnp.zeros_like(dq_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]
+    delta = delta_ref[0, 0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_mask(pl.program_id(2), ik, bq, bk, causal), s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None]) * scale
+    dq_s[...] += jnp.dot(ds, k, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        dq_ref[0, 0] = dq_s[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd(q, k, v, out, lse, do, *, bq, bk, causal, scale, interpret):
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    nq, nk = S // bq, S // bk
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                              # (B, Hq, S)
+
+    kv_spec = pl.BlockSpec((1, 1, bk, D),
+                           lambda b, h, ik, iq: (b, h // group, ik, 0))
+    dkv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, bq=bq, bk=bk, causal=causal,
+                          scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=(B, Hq, nk, nq),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, D), lambda b, h, ik, iq: (b, h, iq, 0)),
+                kv_spec, kv_spec,
+                pl.BlockSpec((1, 1, bq, D), lambda b, h, ik, iq: (b, h, iq, 0)),
+                pl.BlockSpec((1, 1, bq), lambda b, h, ik, iq: (b, h, iq)),
+                pl.BlockSpec((1, 1, bq), lambda b, h, ik, iq: (b, h, iq)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, bk, D), lambda b, h, ik, iq: (b, h, ik, 0)),
+                pl.BlockSpec((1, 1, bk, D), lambda b, h, ik, iq: (b, h, ik, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((bk, D), jnp.float32),
+                            pltpu.VMEM((bk, D), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((B, Hq, S, D), jnp.float32),
+                   jax.ShapeDtypeStruct((B, Hq, S, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    # sum per-query-head dk/dv into the Hkv kv heads
+    dk = dkv[0].reshape(B, Hkv, group, S, D).sum(axis=2).astype(k.dtype)
+    dv = dkv[1].reshape(B, Hkv, group, S, D).sum(axis=2).astype(v.dtype)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, bq=bq, bk=bk, causal=causal,
+                          scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=(B, Hq, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+                pl.BlockSpec((1, 1, bk, D),
+                             lambda b, h, iq, ik: (b, h // group, ik, 0)),
+                pl.BlockSpec((1, 1, bk, D),
+                             lambda b, h, iq, ik: (b, h // group, ik, 0)),
+                pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+                pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+                pl.BlockSpec((1, 1, bq), lambda b, h, iq, ik: (b, h, iq)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bq, D),
+                                   lambda b, h, iq, ik: (b, h, iq, 0)),
+            scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# public custom-VJP op
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, bq=256, bk=256, causal=True,
+                    interpret=True):
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D). Returns (B, Hq, S, D)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    out, _ = _flash_fwd(q, k, v, bq=bq, bk=bk, causal=causal, scale=scale,
+                        interpret=interpret)
+    return out
+
+
+def _fa_fwd(q, k, v, bq, bk, causal, interpret):
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    out, lse = _flash_fwd(q, k, v, bq=bq, bk=bk, causal=causal, scale=scale,
+                          interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(bq, bk, causal, interpret, res, do):
+    q, k, v, out, lse = res
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    dq, dk, dv = _flash_bwd(q, k, v, out, lse, do, bq=bq, bk=bk,
+                            causal=causal, scale=scale, interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

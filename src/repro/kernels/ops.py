@@ -1,0 +1,102 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op validates/pads shapes, picks hardware-aligned block sizes, and
+dispatches to the Pallas kernel — in interpret mode on CPU (this
+container) and compiled on real TPU.  ``use_kernels(False)`` or
+``REPRO_NO_KERNELS=1`` falls back to the jnp oracles, which is also what
+the 512-device dry-run lowers (kernels are a per-device compute detail,
+not a sharding one).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pl
+from repro.kernels.flash_attention import flash_attention as _flash_pl
+from repro.kernels.feature_gather import feature_gather_mean as _gather_pl
+from repro.kernels.neighbor_sample import neighbor_sample as _sample_pl
+from repro.kernels.ssd_chunk_scan import ssd_chunk_scan as _ssd_pl
+
+_ENABLED = os.environ.get("REPRO_NO_KERNELS", "0") != "1"
+
+
+def use_kernels(enabled: bool) -> None:
+    global _ENABLED
+    _ENABLED = enabled
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def feature_gather_mean(table, ids):
+    """(N, F), (M, K) int32 -> (M, F) fanout-mean of gathered rows."""
+    if not _ENABLED:
+        return ref.feature_gather_mean(table, ids)
+    return _gather_pl(table, ids, interpret=_interpret())
+
+
+def neighbor_sample(indptr, indices, targets, rand, *, max_degree: int):
+    """CSR fanout sample.  block_e sized from max_degree (128-aligned)."""
+    if not _ENABLED:
+        return ref.neighbor_sample(indptr, indices, targets, rand)
+    block_e = max(128, int(-(-max_degree // 128) * 128))
+    return _sample_pl(indptr.astype(jnp.int32), indices.astype(jnp.int32),
+                      targets.astype(jnp.int32), rand.astype(jnp.int32),
+                      block_e=block_e, interpret=_interpret())
+
+
+def decode_attention(q, k, v, valid_len, window=0, *, block_s: int = 512):
+    """Flash-decode over a KV cache; pads S up to a block multiple."""
+    if not _ENABLED:
+        return ref.decode_attention(q, k, v, valid_len, window)
+    S = k.shape[1]
+    block_s = min(block_s, max(128, S))
+    pad = (-S) % block_s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return _decode_pl(q, k, v, valid_len, window, block_s=block_s,
+                      interpret=_interpret())
+
+
+def ssd_chunk_scan(x, dt, A, B, C, *, chunk: int = 128):
+    """Mamba-2 SSD scan; pads the sequence up to a chunk multiple."""
+    if not _ENABLED:
+        return ref.ssd_chunk_scan(x, dt, A, B, C, chunk=chunk)
+    s = x.shape[1]
+    chunk = min(chunk, s) if s % chunk == 0 else chunk
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, state = _ssd_pl(x, dt, A, B, C, chunk=chunk, interpret=_interpret())
+    return y[:, :s], state
+
+
+def flash_attention_bshd(q, k, v, *, block_q: int = 256, block_k: int = 256,
+                         causal: bool = True):
+    """Training flash attention on the model's (B, S, H, D) layout.
+
+    Scores/probabilities never leave VMEM (fwd + custom-VJP bwd kernels);
+    GQA handled by BlockSpec index_map.  Blocks are clipped to divisors
+    of S.  Used by the LM when ``cfg.attn_impl == "flash"``.
+    """
+    S = q.shape[1]
+    def fit(b):
+        b = min(b, S)
+        while S % b:
+            b //= 2
+        return max(b, 1)
+    bq, bk = fit(block_q), fit(block_k)
+    qt, kt, vt = (jnp.swapaxes(x, 1, 2) for x in (q, k, v))
+    out = _flash_pl(qt, kt, vt, bq, bk, causal, _interpret())
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function is the mathematical specification the kernel must match
+(asserted by tests/test_kernels.py over shape/dtype sweeps).  These are
+also the implementations the dry-run lowers — the kernels swap in on real
+TPU hardware only; on this CPU container they are validated in
+interpret=True mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def feature_gather_mean(table, ids):
+    """table: (N, F); ids: (M, K) int32 -> (M, F) mean of gathered rows.
+
+    The GNN aggregate step (paper Fig. 1 step ③): gather each sampled
+    neighbor's feature row and mean-reduce over the fanout."""
+    rows = jnp.take(table, ids, axis=0)         # (M, K, F)
+    return rows.mean(axis=1).astype(table.dtype)
+
+
+def neighbor_sample(indptr, indices, targets, rand):
+    """CSR fanout sampling with explicit randomness.
+
+    indptr: (N+1,) int32; indices: (E,) int32; targets: (M,) int32;
+    rand: (M, S) int32 uniform bits.  Returns (M, S) int32 sampled
+    neighbor ids; degree-0 targets sample themselves."""
+    start = jnp.take(indptr, targets)
+    deg = jnp.take(indptr, targets + 1) - start
+    r = rand % jnp.maximum(deg[:, None], 1)
+    idx = jnp.minimum(start[:, None] + r, indices.shape[0] - 1)
+    picked = jnp.take(indices, idx)
+    return jnp.where(deg[:, None] > 0, picked,
+                     targets[:, None]).astype(jnp.int32)
+
+
+def decode_attention(q, k, v, valid_len, window=0):
+    """Single-token attention over a KV cache (GQA).
+
+    q: (B, Hq, D); k/v: (B, S, Hkv, D); valid_len: scalar int;
+    window: int (<=0 full).  Returns (B, Hq, D) in q.dtype."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    group = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    qg = q.reshape(B, Hkv, group, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(S)
+    ok = kpos < valid_len
+    if window and window > 0:
+        ok = ok & (kpos >= valid_len - window)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def ssd_chunk_scan(x, dt, A, B, C, *, chunk: int):
+    """Mamba-2 SSD chunked scan — delegates to the model's reference
+    (models/ssm.ssd_chunked) so kernel and model share one oracle."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, B, C, chunk=chunk)

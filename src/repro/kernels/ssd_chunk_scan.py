@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (intra-chunk quadratic +
+inter-chunk state recurrence).
+
+TPU adaptation (DESIGN.md §2): the CUDA selective scan is a warp-level
+recurrence with no MXU analogue; the SSD *chunked* formulation turns the
+bulk of the work into (chunk x chunk) and (chunk x state) matmuls.  Each
+grid step processes one (batch, head, chunk) tile entirely in VMEM; the
+running inter-chunk state (P x N, fp32) lives in VMEM scratch and is
+carried across the sequential chunk dimension of the grid — only the
+O(P*N) state crosses chunk boundaries, the near-data-reduction shape of
+the paper applied to sequence mixing.
+
+Grid: (B, H, S // chunk), chunk dim innermost (sequential).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, state_out_ref,
+            state_ref, *, chunk: int):
+    c = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (q,)
+    A = A_ref[0].astype(jnp.float32)                 # scalar (this head)
+    Bm = B_ref[0, :, 0, :].astype(jnp.float32)       # (q, N)
+    Cm = C_ref[0, :, 0, :].astype(jnp.float32)       # (q, N)
+
+    dA = dt * A                                      # (q,) <= 0
+    dA_cs = jnp.cumsum(dA)                           # (q,)
+
+    # Intra-chunk: L[i,j] = exp(dA_cs[i] - dA_cs[j]) for i >= j.
+    seg = dA_cs[:, None] - dA_cs[None, :]
+    iota_q = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(iota_q >= iota_k, jnp.exp(seg), 0.0)
+    CB = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # (q, q)
+    xbar = x * dt[:, None]
+    y_intra = jnp.dot(CB * L, xbar,
+                      preferred_element_type=jnp.float32)       # (q, P)
+
+    # Inter-chunk: contribution of the carried state.
+    decay_from_start = jnp.exp(dA_cs)                # (q,)
+    y_inter = decay_from_start[:, None] * jnp.dot(
+        Cm, state_ref[...].T, preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # State update: s' = decay_chunk * s + sum_q B_q (decay_to_end*dt*x)_q.
+    decay_to_end = jnp.exp(dA_cs[-1] - dA_cs)        # (q,)
+    upd = jnp.dot((Bm * (decay_to_end * dt)[:, None]).T, x,
+                  preferred_element_type=jnp.float32).T          # (P, N)
+    state_ref[...] = state_ref[...] * jnp.exp(dA_cs[-1]) + upd
+
+    @pl.when(c == nc - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_scan(x, dt, A, B, C, *, chunk: int = 128,
+                   interpret: bool = True):
+    """x: (b, s, h, p); dt: (b, s, h) post-softplus; A: (h,) negative;
+    B, C: (b, s, g, n) with g dividing h.  Returns (y, final_state):
+    y (b, s, h, p) fp32, final_state (b, h, p, n) fp32."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    y, state = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=(b, h, nc),
+            in_specs=[
+                pl.BlockSpec((1, chunk, 1, p), lambda i, j, c: (i, c, j, 0)),
+                pl.BlockSpec((1, chunk, 1), lambda i, j, c: (i, c, j)),
+                pl.BlockSpec((1,), lambda i, j, c: (j,)),
+                pl.BlockSpec((1, chunk, 1, n),
+                             lambda i, j, c: (i, c, j // rep, 0)),
+                pl.BlockSpec((1, chunk, 1, n),
+                             lambda i, j, c: (i, c, j // rep, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, chunk, 1, p), lambda i, j, c: (i, c, j, 0)),
+                pl.BlockSpec((1, 1, p, n), lambda i, j, c: (i, j, 0, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, state

@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the real step function (train_step including the
+optimizer update, prefill_step, or serve_step) against ShapeDtypeStruct
+inputs carrying production NamedShardings, compiles it for the host
+platform (512 placeholder devices), and records:
+
+  * memory_analysis()  — proves the cell fits 16 GB/chip HBM,
+  * cost_analysis()    — per-chip HLO FLOPs / bytes for §Roofline,
+  * parsed collective stats from the optimized HLO,
+  * derived roofline terms (compute / memory / collective seconds).
+
+Results are cached as JSON under --out (default experiments/dryrun) so
+benchmarks and EXPERIMENTS.md build from them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all                 # single-pod, all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod     # 2-pod pass
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+
+# Per-(arch, shape) gradient-accumulation defaults sized so the remat'd
+# layer-scan residuals fit 16 GB/chip (see DESIGN.md §3; §Perf iterates on
+# these).
+TRAIN_MICROBATCHES = {
+    "qwen2-0.5b": 2, "codeqwen1.5-7b": 4, "mistral-nemo-12b": 8,
+    "gemma3-1b": 2, "mamba2-370m": 4, "mixtral-8x7b": 8,
+    "moonshot-v1-16b-a3b": 4, "qwen2-vl-7b": 16, "hymba-1.5b": 4,
+    "seamless-m4t-large-v2": 16,
+}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             rules_overrides=None, microbatches=None, out_dir="experiments/dryrun",
+             tag="baseline", verbose=True, cfg_overrides=None, ce="gather"):
+    from repro.distributed.sharding import ShardingRules
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import SHAPES, cell_skip_reason, input_specs
+    from repro.models.registry import get_config
+    from repro.models.transformer import LM
+    from repro.optim.adamw import adamw
+    from repro.roofline import analysis as roofline
+    from repro.train.steps import (abstract_train_state, build_prefill_step,
+                                   build_serve_step, build_train_step)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}__{tag}"
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "tag": tag, "kind": shape.kind, "n_chips": n_chips,
+              "ok": False}
+
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        record.update(skipped=True, skip_reason=skip, ok=True)
+        _write(out_dir, cell_id, record, verbose)
+        return record
+
+    if cfg_overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+        record["cfg_overrides"] = {k: str(v) for k, v in
+                                   cfg_overrides.items()}
+    record["ce"] = ce
+    rules = ShardingRules.default(rules_overrides)
+    model = LM(cfg)
+    record["params_total"] = model.param_count()
+    record["params_active"] = model.active_param_count()
+
+    t0 = time.time()
+    try:
+        with mesh:
+            if shape.kind == "train":
+                mb = microbatches or TRAIN_MICROBATCHES.get(arch, 1)
+                record["microbatches"] = mb
+                opt = adamw(3e-4)
+                step_fn = build_train_step(model, opt, mesh, rules,
+                                           microbatches=mb, ce=ce)
+                state_abs = abstract_train_state(model, opt, rules, mesh)
+                batch_abs = input_specs(cfg, shape, rules, mesh)
+                lowered = jax.jit(step_fn, donate_argnums=0).lower(
+                    state_abs, batch_abs)
+            elif shape.kind == "prefill":
+                step_fn = build_prefill_step(model, mesh, rules)
+                params_abs = model.abstract(rules, mesh)
+                batch_abs = input_specs(cfg, shape, rules, mesh)
+                lowered = jax.jit(step_fn).lower(params_abs, batch_abs)
+            else:  # decode
+                step_fn = build_serve_step(model, mesh, rules)
+                params_abs = model.abstract(rules, mesh)
+                specs = input_specs(cfg, shape, rules, mesh)
+                lowered = jax.jit(step_fn, donate_argnums=(2,)).lower(
+                    params_abs, specs["tokens"], specs["cache"],
+                    specs["position"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # noqa: BLE001 — failures are cell bugs, recorded
+        record.update(error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        _write(out_dir, cell_id, record, verbose)
+        return record
+
+    from repro.roofline import hlo_parse
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    costs = hlo_parse.analyze(hlo, n_chips)
+    mf = roofline.model_flops(cfg, shape, record["params_active"])
+    terms = roofline.compute_terms_from_costs(costs, n_chips, mf)
+
+    hbm = 16 * 1024**3
+    per_chip_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                      + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    record.update(
+        ok=True, lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "per_chip_live_bytes": per_chip_bytes,
+            "fits_16GB": bool(per_chip_bytes < hbm),
+        },
+        cost_analysis_once={k: v for k, v in cost.items()
+                            if k in ("flops", "bytes accessed")},
+        collectives={"counts": costs.collective_counts,
+                     "result_bytes": costs.collective_bytes,
+                     "link_bytes_per_chip": costs.link_bytes},
+        loop_trip_counts=costs.loop_trip_counts,
+        roofline=terms.to_json(),
+        model_flops_total=mf,
+    )
+    _write(out_dir, cell_id, record, verbose)
+    if verbose:
+        r = record["roofline"]
+        print(f"  terms: compute={r['compute_s']:.4e}s "
+              f"memory={r['memory_s']:.4e}s collective={r['collective_s']:.4e}s"
+              f" bound={r['bound']} roofline_frac={r['roofline_fraction']:.3f}")
+        print(f"  memory/chip: {per_chip_bytes/2**30:.2f} GiB "
+              f"(fits16GB={record['memory']['fits_16GB']}) "
+              f"compile={t_compile:.1f}s")
+    return record
+
+
+def _write(out_dir, cell_id, record, verbose):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, cell_id + ".json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    if verbose:
+        status = ("SKIP" if record.get("skipped")
+                  else "OK" if record["ok"] else "FAIL")
+        print(f"[{status}] {cell_id}"
+              + (f"  ({record.get('skip_reason','')})" if status == "SKIP"
+                 else "")
+              + (f"  ERROR: {record.get('error','')}" if status == "FAIL"
+                 else ""))
+
+
+def main():
+    from repro.launch.shapes import SHAPES
+    from repro.models.registry import ARCH_IDS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--ce", default="gather", choices=("gather", "sharded"))
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override, e.g. --set attn_remat=True")
+    args = ap.parse_args()
+
+    cfg_overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        cfg_overrides[k] = eval(v)  # noqa: S307 — trusted CLI input
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    failures = 0
+    for a, s in cells:
+        cell_id = f"{a}__{s}__{mesh_name}__{args.tag}"
+        path = os.path.join(args.out, cell_id + ".json")
+        if args.skip_existing and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("ok"):
+                    print(f"[CACHED] {cell_id}")
+                    continue
+        print(f"=== {cell_id} ===", flush=True)
+        rec = run_cell(a, s, multi_pod=args.multi_pod, tag=args.tag,
+                       microbatches=args.microbatches, out_dir=args.out,
+                       cfg_overrides=cfg_overrides or None, ce=args.ce)
+        failures += 0 if rec["ok"] else 1
+    print(f"dry-run complete: {len(cells)} cells, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

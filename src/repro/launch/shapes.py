@@ -1,0 +1,113 @@
+"""Assigned input-shape cells and abstract input specs for the dry-run.
+
+Every (arch x shape) cell is defined here.  ``input_specs`` returns
+ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no device
+allocation); ``make_batch`` returns small concrete batches for smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules, named_sharding
+from repro.models.registry import ModelConfig
+from repro.models.transformer import COMPUTE_DTYPE, LM
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeCell) -> str | None:
+    """Return a skip reason or None.  Documented in DESIGN.md §4."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention arch: long_500k requires sub-quadratic "
+                "attention (DESIGN.md §4)")
+    return None
+
+
+def _sds(shape, dtype, logical_axes, rules, mesh):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=named_sharding(logical_axes, rules, mesh, shape))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell, rules: ShardingRules,
+                mesh) -> dict[str, Any]:
+    """Abstract model inputs for one cell (dry-run lowering)."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        if cfg.embeds_input and cfg.family != "encdec":
+            batch["embeds"] = _sds((B, S, d), COMPUTE_DTYPE,
+                                   ("batch", "seq", "act_embed"), rules, mesh)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32, ("batch", "seq"),
+                                   rules, mesh)
+        if cfg.family == "encdec":
+            batch["src_embeds"] = _sds((B, S // cfg.enc_seq_divisor, d),
+                                       COMPUTE_DTYPE,
+                                       ("batch", "enc_seq", "act_embed"),
+                                       rules, mesh)
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), jnp.int32, ("batch", "seq"),
+                                   rules, mesh)
+        return batch
+    # decode
+    model = LM(cfg)
+    cache_defs = model.cache_defs(B, S)
+    from repro.models.params import ParamDef  # local import to avoid cycle
+
+    cache = jax.tree.map(
+        lambda dd: _sds(dd.shape, dd.dtype, dd.logical_axes, rules, mesh),
+        cache_defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return {
+        "tokens": _sds((B, 1), jnp.int32, ("batch", None), rules, mesh),
+        "cache": cache,
+        "position": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def make_batch(cfg: ModelConfig, B: int, S: int, seed: int = 0,
+               kind: str = "train"):
+    """Concrete small batch for smoke tests / examples."""
+    rng = np.random.default_rng(seed)
+    d = cfg.d_model
+    if kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        if cfg.embeds_input and cfg.family != "encdec":
+            batch["embeds"] = jnp.asarray(
+                rng.normal(size=(B, S, d)).astype(np.float32), COMPUTE_DTYPE)
+        else:
+            batch["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        if cfg.family == "encdec":
+            batch["src_embeds"] = jnp.asarray(
+                rng.normal(size=(B, S // cfg.enc_seq_divisor, d))
+                .astype(np.float32), COMPUTE_DTYPE)
+        if kind == "train":
+            batch["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        return batch
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)),
+                              jnp.int32),
+        "position": jnp.asarray(S - 1, jnp.int32),
+    }

@@ -1,0 +1,99 @@
+"""Shared layer primitives: norms, activations, RoPE / M-RoPE, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_def(dim: int, layers: int | None = None) -> ParamDef:
+    if layers is None:
+        return ParamDef((dim,), ("embed",), init="ones")
+    return ParamDef((layers, dim), ("layers", "embed"), init="ones")
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    angles = angles[..., None, :]                               # broadcast heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float = 1e4):
+    """Multimodal RoPE (Qwen2-VL): rotary dims split into (t, h, w) sections.
+
+    x: (..., seq, heads, head_dim); positions3: (3, ..., seq) int32;
+    sections: 3 ints summing to head_dim//2.
+    """
+    head_dim = x.shape[-1]
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    # Build per-frequency position source: section i uses positions3[i].
+    sec_ids = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                         total_repeat_length=head_dim // 2)  # (hd/2,)
+    # positions3: (3, ..., seq) -> (..., seq, hd/2) by selecting per section
+    pos = jnp.take(jnp.moveaxis(positions3, 0, -1), sec_ids, axis=-1)
+    angles = pos.astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_def(vocab: int, d_model: int) -> ParamDef:
+    # Vocab-sharded over 'model': the SPMD partitioner implements the row
+    # gather as local-masked-gather + psum of the (tokens, d) result — tiny
+    # collective bytes vs. all-gathering a multi-GB table, and for tied
+    # embeddings the unembed matmul then produces vocab-sharded logits with
+    # no resharding (see DESIGN.md §4).
+    # init scaled by 1/sqrt(d_model) so tied-embedding logits start at
+    # unit variance (archs with embed_scale multiply sqrt(d) back in).
+    return ParamDef((vocab, d_model), ("vocab", "embed"), init="normal",
+                    fan_in_axes=(1,))
+
+
+def unembed_def(d_model: int, vocab: int) -> ParamDef:
+    # Output projection IS vocab-sharded so logits shard over 'model'.
+    return ParamDef((d_model, vocab), ("embed", "vocab"))
+
+
+def embed_lookup(table, token_ids, compute_dtype):
+    return jnp.take(table.astype(compute_dtype), token_ids, axis=0)

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts with top-k routing and capacity-based dispatch.
+
+The dispatch is the LM-side incarnation of the paper's sample-and-gather:
+the router *samples* k experts per token, and only the *selected* token rows
+are gathered to the expert shards (an all_to_all of the reduced set), never
+the full activation tensor — exactly the SmartSAGE "ship the subgraph, not
+the edge list" data movement (DESIGN.md §2).
+
+Dispatch is scatter/gather based (Megablocks-style, not the O(T*E*C)
+one-hot einsum): position-in-expert via a cumsum over the one-hot routing
+matrix, token rows gathered into an (E, C, d) buffer, batched expert
+einsums, then a scatter-add combine.  FLOP cost is k/E of the dense-all-
+experts formulation (times the capacity factor), which is what keeps the
+roofline's MODEL_FLOPS/HLO_FLOPS ratio honest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+
+def moe_defs(d_model: int, d_ff: int, num_experts: int, layers: int):
+    return {
+        "router": ParamDef((layers, d_model, num_experts),
+                           ("layers", "embed", None)),
+        "w_gate": ParamDef((layers, num_experts, d_model, d_ff),
+                           ("layers", "experts", "embed", "mlp"),
+                           fan_in_axes=(2,)),
+        "w_up": ParamDef((layers, num_experts, d_model, d_ff),
+                         ("layers", "experts", "embed", "mlp"),
+                         fan_in_axes=(2,)),
+        "w_down": ParamDef((layers, num_experts, d_ff, d_model),
+                           ("layers", "experts", "mlp", "embed"),
+                           fan_in_axes=(2,)),
+    }
+
+
+def apply_moe(p, x, *, top_k: int, capacity_factor: float = 1.25,
+              act=jax.nn.silu, routing: str = "softmax", groups: int = 1,
+              constrain_fn=None):
+    """p: per-layer slice of moe_defs params. x: (B, S, d). Returns (B, S, d)
+    plus aux losses dict.
+
+    ``groups``: dispatch groups.  groups=1 is global dispatch (baseline):
+    the position-in-expert cumsum runs over ALL tokens, which under GSPMD
+    forces an all-gather of the (T*k, E) routing one-hot across the data
+    axis.  groups=<data shards> localizes routing: each group computes its
+    own cumsum and capacity (C/groups), so routing bookkeeping stays
+    shard-local and only the expert compute crosses the 'model' axis --
+    the Perf fix for the MoE cells' collective term (EXPERIMENTS.md).
+    """
+    B, S, d = x.shape
+    T = B * S
+    E = p["router"].shape[-1]
+    G = groups if T % groups == 0 else 1
+    Tg = T // G
+    xt = x.reshape(G, Tg, d)
+    C = int(capacity_factor * top_k * Tg / E)
+    C = max(1, min(C, Tg))
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if routing == "softmax":
+        gate_vals, expert_idx = jax.lax.top_k(logits, top_k)     # (G, Tg, k)
+        gates = jax.nn.softmax(gate_vals, axis=-1)
+    else:  # sigmoid (deepseek/moonlight-style), renormalized over top-k
+        scores = jax.nn.sigmoid(logits)
+        gate_vals, expert_idx = jax.lax.top_k(scores, top_k)
+        gates = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True),
+                                        1e-9)
+
+    # Load-balancing auxiliary loss (Switch-style).
+    probs = jax.nn.softmax(logits, axis=-1)                       # (G, Tg, E)
+    sel_onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+    frac_tokens = sel_onehot.sum(axis=(0, 1, 2)) / (T * top_k)
+    frac_probs = probs.mean(axis=(0, 1))
+    aux_loss = E * jnp.sum(frac_tokens * frac_probs)
+
+    # Position of each (token, k) assignment within its expert's capacity,
+    # PER GROUP (cumsum over the group-local token axis only).
+    flat_e = expert_idx.reshape(G, Tg * top_k)                    # (G, Tk)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)               # (G, Tk, E)
+    pos_in_e = jnp.cumsum(oh, axis=1) - 1
+    pos = jnp.take_along_axis(pos_in_e, flat_e[..., None],
+                              axis=2)[..., 0]                     # (G, Tk)
+    keep = pos < C
+
+    g_idx = jnp.arange(G)[:, None]
+    token_ids = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), top_k)[None], (G, Tg * top_k))
+    # Scatter token ids into the per-group (E, C) slot table; dropped slots
+    # keep the Tg sentinel (zeroed rows on gather).
+    slot_tok = jnp.full((G, E, C), Tg, jnp.int32)
+    slot_tok = slot_tok.at[g_idx, flat_e, jnp.where(keep, pos, C)].set(
+        jnp.where(keep, token_ids, Tg), mode="drop")
+    slot_valid = slot_tok < Tg                                    # (G, E, C)
+
+    xg = jnp.take_along_axis(
+        xt, jnp.minimum(slot_tok, Tg - 1).reshape(G, E * C)[..., None],
+        axis=1).reshape(G, E, C, d)
+    xg = jnp.where(slot_valid[..., None], xg, 0)
+
+    # Pin the expert-parallel layout: groups on the data axis, experts on
+    # the model axis — keeps GSPMD from replicating the expert einsums.
+    if constrain_fn is not None:
+        ec = lambda a: constrain_fn(a, ("moe_group", "experts", None, None))
+        eh = lambda a: constrain_fn(a, ("moe_group", "experts", None, "mlp"))
+    else:
+        ec = eh = lambda a: a
+    xg = ec(xg)
+    h = act(jnp.einsum("gecd,edf->gecf", xg, p["w_gate"].astype(x.dtype)))
+    h = eh(h) * jnp.einsum("gecd,edf->gecf", xg, p["w_up"].astype(x.dtype))
+    y = ec(jnp.einsum("gecf,efd->gecd", eh(h), p["w_down"].astype(x.dtype)))
+
+    # Combine: TOKEN-SIDE gather of each assignment's expert output.  A
+    # scatter-add combine makes GSPMD materialize the (G, Tg, d) output
+    # replicated across the data axis (measured: +3x collective bytes);
+    # the gather form lowers to a masked local gather + psum over 'model'
+    # — the same near-data pattern as the embedding lookup.
+    flat_gates = gates.reshape(G, Tg * top_k)
+    y_flat = y.reshape(G, E * C, d)
+    slot_of_assign = jnp.minimum(flat_e * C + jnp.where(keep, pos, C - 1),
+                                 E * C - 1)                    # (G, Tk)
+    picked = jnp.take_along_axis(y_flat, slot_of_assign[..., None], axis=1)
+    picked = jnp.where(keep[..., None], picked, 0.0)           # (G, Tk, d)
+    out = (picked.astype(jnp.float32)
+           * flat_gates[..., None]).reshape(G, Tg, top_k, d).sum(axis=2)
+    if constrain_fn is not None:
+        out = constrain_fn(out, ("moe_group", None, None))
+    return out.reshape(B, S, d).astype(x.dtype), {"moe_aux_loss": aux_loss}

@@ -1,0 +1,94 @@
+"""Parameter definition system.
+
+A model is declared once as a pytree of ``ParamDef`` (shape + logical axes +
+init).  From that single declaration we derive, guaranteed-consistent:
+
+* ``init_params``      — concrete fp32 arrays (works under jax.eval_shape),
+* ``param_specs``      — pytree of logical-axis tuples,
+* ``abstract_params``  — ShapeDtypeStructs with NamedShardings (dry-run),
+* ``param_shardings``  — NamedSharding pytree for jit in_shardings,
+* ``count_params``     — exact parameter count (MoE active/total split).
+
+This is the mechanism that keeps the 512-chip dry-run shardings and the
+1-CPU smoke tests in lock-step with the actual training code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules, named_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"      # normal | zeros | ones | embed | head_scaled
+    fan_in_axes: tuple[int, ...] = (0,)  # which dims count as fan-in for scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            f"shape {self.shape} vs axes {self.logical_axes}")
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key):
+    """Materialize fp32 params from a ParamDef pytree (eval_shape friendly)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    arrays = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            arrays.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            arrays.append(jnp.ones(d.shape, d.dtype))
+        else:
+            fan_in = max(1, int(np.prod([d.shape[a] for a in d.fan_in_axes])))
+            scale = {
+                "normal": 1.0 / math.sqrt(fan_in),
+                "embed": 1.0,
+                "head_scaled": 0.5 / math.sqrt(fan_in),
+            }[d.init]
+            arrays.append(scale * jax.random.normal(k, d.shape, d.dtype))
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def param_specs(defs):
+    return jax.tree.map(lambda d: d.logical_axes, defs, is_leaf=_is_def)
+
+
+def param_shardings(defs, rules: ShardingRules, mesh):
+    return jax.tree.map(
+        lambda d: named_sharding(d.logical_axes, rules, mesh, d.shape),
+        defs, is_leaf=_is_def)
+
+
+def abstract_params(defs, rules: ShardingRules, mesh):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, d.dtype,
+            sharding=named_sharding(d.logical_axes, rules, mesh, d.shape)),
+        defs, is_leaf=_is_def)
+
+
+def count_params(defs) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(defs, is_leaf=_is_def))
+
+
+def cast_tree(params, dtype):
+    """Cast float params to compute dtype (mixed precision at use-site)."""
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params)

@@ -1,0 +1,203 @@
+"""Mamba-2 (SSD — state-space duality) block, TPU-adapted.
+
+The CUDA selective-scan has no TPU analogue; the SSD *chunked* formulation
+is the TPU-native adaptation (DESIGN.md §2): within-chunk work is a batch of
+128-aligned matmuls (MXU-friendly) and only the O(H*P*N) chunk states flow
+through the sequential inter-chunk scan — a near-data reduction over chunks
+that mirrors the paper's ship-the-reduction-not-the-raw-data principle.
+
+Pure-jnp here (used by dry-run lowering and as the kernel oracle);
+kernels/ssd_chunk_scan.py implements the same block math as a Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.params import ParamDef
+
+
+def ssm_defs(d_model: int, d_inner: int, n_heads: int, d_state: int,
+             d_conv: int, layers: int, n_groups: int = 1):
+    conv_dim = d_inner + 2 * n_groups * d_state
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    return {
+        "in_proj": ParamDef((layers, d_model, d_in_proj),
+                            ("layers", "embed", None)),
+        "conv_w": ParamDef((layers, d_conv, conv_dim),
+                           ("layers", "conv", None)),
+        "conv_b": ParamDef((layers, conv_dim), ("layers", None), init="zeros"),
+        "A_log": ParamDef((layers, n_heads), ("layers", "ssm_head"),
+                          init="zeros"),
+        "D": ParamDef((layers, n_heads), ("layers", "ssm_head"), init="ones"),
+        "dt_bias": ParamDef((layers, n_heads), ("layers", "ssm_head"),
+                            init="zeros"),
+        "norm": ParamDef((layers, d_inner), ("layers", None), init="ones"),
+        "out_proj": ParamDef((layers, d_inner, d_model),
+                             ("layers", "mlp", "embed")),
+    }
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y.astype(jnp.float32) * lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int):
+    """SSD scan, chunked.
+
+    x: (b, s, h, p) inputs; dt: (b, s, h) post-softplus step sizes;
+    A: (h,) negative decay rates; B, C: (b, s, g, n), g groups (g divides h).
+    Returns y: (b, s, h, p), final_state: (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                     # (b,nc,q,h), <=0
+    dA_cs = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+
+    # Intra-chunk (the "attention-like" quadratic term, masked causal):
+    # L[i,j] = exp(dA_cs[i] - dA_cs[j]) for i >= j.
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]   # (b,nc,q,q,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcqhn,bckhn->bcqkh", Cc, Bc)             # (b,nc,q,q,h)
+    xbar = xc * dtc[..., None]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", CB * L, xbar)
+
+    # Chunk states: contribution of each chunk to the running state.
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)       # (b,nc,q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bc, decay_to_end * dtc, xc)
+
+    # Inter-chunk recurrence (sequential scan over chunks).
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                 # (b,nc,h)
+
+    def step(state, inp):
+        st_c, dec_c = inp                                     # (b,h,p,n),(b,h)
+        new = state * dec_c[:, :, None, None] + st_c
+        return new, state                                     # emit state *before* chunk
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final_state, prev_states = lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)             # (b,nc,h,p,n)
+
+    decay_from_start = jnp.exp(dA_cs)                         # (b,nc,q,h)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         Cc, prev_states, decay_from_start)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final_state
+
+
+def apply_ssm(p, x, *, n_heads: int, d_state: int, d_conv: int,
+              chunk: int = 256, n_groups: int = 1):
+    """Full mamba2 mixer, training/prefill path.
+
+    p: per-layer slice of ssm_defs. x: (B, S, d_model).
+    Returns (y, (final_state, conv_tail)) for cache seeding.
+    """
+    Bsz, S, d = x.shape
+    d_inner = p["out_proj"].shape[0]
+    head_p = d_inner // n_heads
+    conv_dim = d_inner + 2 * n_groups * d_state
+
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xBC_raw, dt_raw = jnp.split(proj, [d_inner, d_inner + conv_dim],
+                                   axis=-1)
+
+    # Depthwise causal conv over (x, B, C), kernel width d_conv.
+    w = p["conv_w"].astype(x.dtype)                           # (d_conv, conv_dim)
+    pad = jnp.pad(xBC_raw, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S, :] * w[i][None, None, :] for i in range(d_conv))
+    xBC = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+
+    xs, Bmat, Cmat = jnp.split(
+        xBC, [d_inner, d_inner + n_groups * d_state], axis=-1)
+    xs = xs.reshape(Bsz, S, n_heads, head_p)
+    Bmat = Bmat.reshape(Bsz, S, n_groups, d_state)
+    Cmat = Cmat.reshape(Bsz, S, n_groups, d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+
+    # Pad the sequence up to a chunk multiple; padded steps get dt=0 so
+    # they neither emit output nor perturb the carried state (decay=1).
+    Sp = -(-S // chunk) * chunk
+    if Sp != S:
+        padlen = Sp - S
+        xs = jnp.pad(xs, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padlen), (0, 0)))
+
+    y, final_state = ssd_chunked(xs.astype(jnp.float32), dt, A,
+                                 Bmat.astype(jnp.float32),
+                                 Cmat.astype(jnp.float32), chunk=chunk)
+    y = y[:, :S] + (xs[:, :S].astype(jnp.float32)
+                    * p["D"].astype(jnp.float32)[None, None, :, None])
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    # Decode resumes the depthwise conv from the RAW (pre-conv) projections
+    # of the last d_conv-1 positions.
+    conv_tail = jnp.pad(
+        xBC_raw, ((0, 0), (d_conv - 1, 0), (0, 0)))[:, S:S + d_conv - 1, :]
+    return out, (final_state.astype(x.dtype), conv_tail)
+
+
+def apply_ssm_decode(p, x, state, conv_cache, *, n_heads: int, d_state: int,
+                     d_conv: int, n_groups: int = 1):
+    """Single-token recurrent step.
+
+    x: (B, 1, d_model); state: (B, H, P, N); conv_cache: (B, d_conv-1, conv_dim).
+    Returns (y, new_state, new_conv_cache).  O(1) in context length — this is
+    why SSM archs run the long_500k cell.
+    """
+    Bsz = x.shape[0]
+    d_inner = p["out_proj"].shape[0]
+    head_p = d_inner // n_heads
+    conv_dim = d_inner + 2 * n_groups * d_state
+
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xBC, dt_raw = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)
+
+    hist = jnp.concatenate([conv_cache, xBC], axis=1)          # (B, d_conv, cd)
+    w = p["conv_w"].astype(x.dtype)
+    conv = jnp.einsum("bkc,kc->bc", hist, w)[:, None, :]
+    xBC = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+    new_conv_cache = hist[:, 1:, :]
+
+    xs, Bmat, Cmat = jnp.split(
+        xBC, [d_inner, d_inner + n_groups * d_state], axis=-1)
+    xs = xs.reshape(Bsz, n_heads, head_p)
+    Bmat = jnp.repeat(Bmat.reshape(Bsz, n_groups, d_state),
+                      n_heads // n_groups, axis=1)
+    Cmat = jnp.repeat(Cmat.reshape(Bsz, n_groups, d_state),
+                      n_heads // n_groups, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0, :].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    decay = jnp.exp(dt * A[None, :])                           # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bmat.astype(jnp.float32),
+                     xs.astype(jnp.float32))
+    new_state = state.astype(jnp.float32) * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Cmat.astype(jnp.float32), new_state)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, new_state.astype(x.dtype), new_conv_cache

@@ -1,0 +1,575 @@
+"""Model assembly: dense / MoE / SSM / hybrid / enc-dec LMs.
+
+All stacks scan over layers with stacked parameters (leading ``layers``
+dim) so the lowered HLO is O(1) in depth — this is what keeps 80
+(arch x shape x mesh) dry-run compiles tractable and is also the deployed
+configuration (remat composes with scan).
+
+Three entry points per model:
+  * ``forward``      — training path: tokens/embeds -> logits (+aux)
+  * ``prefill``      — inference prefill: builds the KV cache / SSM state
+  * ``decode_step``  — one-token decode against the (possibly seq-sharded)
+                       cache, using the near-data sharded attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.distributed.sharding import ShardingRules, constrain, named_sharding
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import (decode_attention_local, mha_chunked,
+                                    sharded_decode_attention)
+from repro.models.layers import (activation, apply_mrope, apply_rope,
+                                 embed_def, embed_lookup, rmsnorm,
+                                 rmsnorm_def, unembed_def)
+from repro.models.params import (ParamDef, abstract_params, cast_tree,
+                                 count_params, init_params, param_shardings,
+                                 param_specs)
+from repro.models.registry import ModelConfig
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def _attn_defs(cfg: ModelConfig, L: int) -> dict[str, ParamDef]:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "attn_norm": rmsnorm_def(d, L),
+        "wq": ParamDef((L, d, H, Dh), ("layers", "embed", "heads", "qkv")),
+        "wk": ParamDef((L, d, Hkv, Dh), ("layers", "embed", "kv_heads", "qkv")),
+        "wv": ParamDef((L, d, Hkv, Dh), ("layers", "embed", "kv_heads", "qkv")),
+        "wo": ParamDef((L, H, Dh, d), ("layers", "heads", "qkv", "embed"),
+                       fan_in_axes=(1, 2)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((L, H, Dh), ("layers", "heads", "qkv"), init="zeros")
+        defs["bk"] = ParamDef((L, Hkv, Dh), ("layers", "kv_heads", "qkv"), init="zeros")
+        defs["bv"] = ParamDef((L, Hkv, Dh), ("layers", "kv_heads", "qkv"), init="zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((L, Dh), ("layers", "qkv"), init="ones")
+        defs["k_norm"] = ParamDef((L, Dh), ("layers", "qkv"), init="ones")
+    if cfg.post_norms:
+        defs["post_attn_norm"] = rmsnorm_def(d, L)
+    return defs
+
+
+def _mlp_defs(cfg: ModelConfig, L: int) -> dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    defs = {
+        "mlp_norm": rmsnorm_def(d, L),
+        "w_gate": ParamDef((L, d, f), ("layers", "embed", "mlp")),
+        "w_up": ParamDef((L, d, f), ("layers", "embed", "mlp")),
+        "w_down": ParamDef((L, f, d), ("layers", "mlp", "embed")),
+    }
+    if cfg.post_norms:
+        defs["post_mlp_norm"] = rmsnorm_def(d, L)
+    return defs
+
+
+def _cross_defs(cfg: ModelConfig, L: int) -> dict[str, ParamDef]:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "cross_norm": rmsnorm_def(d, L),
+        "wq_c": ParamDef((L, d, H, Dh), ("layers", "embed", "heads", "qkv")),
+        "wk_c": ParamDef((L, d, Hkv, Dh), ("layers", "embed", "kv_heads", "qkv")),
+        "wv_c": ParamDef((L, d, Hkv, Dh), ("layers", "embed", "kv_heads", "qkv")),
+        "wo_c": ParamDef((L, H, Dh, d), ("layers", "heads", "qkv", "embed"),
+                         fan_in_axes=(1, 2)),
+    }
+
+
+def _block_defs(cfg: ModelConfig, L: int, *, decoder_of_encdec=False) -> dict:
+    fam = cfg.family
+    if fam == "ssm":
+        return {
+            "ssm_norm": rmsnorm_def(cfg.d_model, L),
+            **ssm_lib.ssm_defs(cfg.d_model, cfg.d_inner, cfg.ssm_heads,
+                               cfg.ssm_state, cfg.d_conv, L,
+                               n_groups=cfg.ssm_groups),
+        }
+    defs = _attn_defs(cfg, L)
+    if fam == "moe":
+        defs["mlp_norm"] = rmsnorm_def(cfg.d_model, L)
+        defs.update(moe_lib.moe_defs(cfg.d_model, cfg.moe_d_ff,
+                                     cfg.num_experts, L))
+    elif fam == "hybrid":
+        defs.update(ssm_lib.ssm_defs(cfg.d_model, cfg.d_inner, cfg.ssm_heads,
+                                     cfg.ssm_state, cfg.d_conv, L,
+                                     n_groups=cfg.ssm_groups))
+        defs["attn_branch_norm"] = rmsnorm_def(cfg.d_model, L)
+        defs["ssm_branch_norm"] = rmsnorm_def(cfg.d_model, L)
+        defs.update(_mlp_defs(cfg, L))
+    else:  # dense / encdec
+        defs.update(_mlp_defs(cfg, L))
+    if decoder_of_encdec:
+        defs.update(_cross_defs(cfg, L))
+    return defs
+
+
+def build_defs(cfg: ModelConfig) -> dict:
+    defs: dict[str, Any] = {
+        "embed": embed_def(cfg.vocab_size, cfg.d_model),
+        "final_norm": rmsnorm_def(cfg.d_model),
+        "blocks": _block_defs(cfg, cfg.num_layers,
+                              decoder_of_encdec=cfg.family == "encdec"),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = unembed_def(cfg.d_model, cfg.vocab_size)
+    if cfg.family == "encdec":
+        enc_cfg = dataclasses.replace(cfg, family="dense", post_norms=False)
+        defs["enc_blocks"] = _block_defs(enc_cfg, cfg.encoder_layers)
+        defs["enc_final_norm"] = rmsnorm_def(cfg.d_model)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg: ModelConfig, p, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _rope_qk(cfg: ModelConfig, q, k, positions):
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _attn_block(cfg: ModelConfig, p, x, positions, window, *, causal=True,
+                ctx=None):
+    """Full-sequence attention sub-block (training / prefill / encoder).
+
+    Returns (out, (k, v)) — k/v returned for cache seeding in prefill.
+    """
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(cfg, p, h)
+    bpos = jnp.broadcast_to(positions, (x.shape[0],) + positions.shape) \
+        if positions.ndim == 1 else positions
+    q, kr = _rope_qk(cfg, q, k, bpos)
+    if (cfg.attn_impl == "flash" and causal and cfg.sliding_window == 0
+            and cfg.local_global_ratio == 0):
+        # Pallas fused kernel: O(S) HBM traffic for the score pipeline.
+        # Window archs keep the chunked path (traced per-layer windows).
+        from repro.kernels.ops import flash_attention_bshd
+        out = flash_attention_bshd(q, kr, v, block_q=cfg.attn_chunk_q,
+                                   block_k=cfg.attn_chunk_k, causal=True)
+    else:
+        out = mha_chunked(q, kr, v, q_positions=positions.reshape(-1),
+                          k_positions=positions.reshape(-1), window=window,
+                          causal=causal, chunk_q=cfg.attn_chunk_q,
+                          chunk_k=cfg.attn_chunk_k,
+                          remat_chunks=cfg.attn_remat,
+                          scores_bf16=cfg.attn_scores_bf16)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if cfg.post_norms:
+        out = rmsnorm(out, p["post_attn_norm"], cfg.norm_eps)
+    return out, (kr, v)
+
+
+def _cross_attn_block(cfg: ModelConfig, p, x, enc_out):
+    h = rmsnorm(x, p["cross_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq_c"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk_c"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv_c"].astype(x.dtype))
+    Sq, Sk = x.shape[1], enc_out.shape[1]
+    out = mha_chunked(q, k, v,
+                      q_positions=jnp.arange(Sq), k_positions=jnp.arange(Sk),
+                      window=0, causal=False, chunk_q=cfg.attn_chunk_q,
+                      chunk_k=cfg.attn_chunk_k)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo_c"].astype(x.dtype))
+
+
+def _mlp_block(cfg: ModelConfig, p, x):
+    h = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    act = activation(cfg.act)
+    g = act(jnp.einsum("bsd,df->bsf", h, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("bsd,df->bsf", h, p["w_up"].astype(x.dtype))
+    out = jnp.einsum("bsf,fd->bsd", g * u, p["w_down"].astype(x.dtype))
+    if cfg.post_norms:
+        out = rmsnorm(out, p["post_mlp_norm"], cfg.norm_eps)
+    return out
+
+
+def _apply_block(cfg: ModelConfig, p, x, positions, window, *, causal=True,
+                 enc_out=None, want_cache=False, weight_constrain=None):
+    """One decoder block, training/prefill path. Returns (x, cache_seed, aux)."""
+    fam = cfg.family
+    aux = {}
+    cache_seed = ()
+    if fam == "moe" and cfg.moe_zero3_gather and weight_constrain is not None:
+        # Gather the fsdp-sharded d_model dim at use (ZeRO-3) so the expert
+        # einsum contracts an unsharded d.  Model-axis parallelism comes
+        # from 'experts' when E divides the axis (moonshot 64e/16) and
+        # falls through to Megatron-style FFN sharding otherwise
+        # (mixtral 8e/16) — logical_to_spec's divisibility rule arbitrates.
+        p = dict(p)
+        p["w_gate"] = weight_constrain(p["w_gate"], ("experts", None, "mlp"))
+        p["w_up"] = weight_constrain(p["w_up"], ("experts", None, "mlp"))
+        p["w_down"] = weight_constrain(p["w_down"], ("experts", "mlp", None))
+    if fam == "ssm":
+        h = rmsnorm(x, p["ssm_norm"], cfg.norm_eps)
+        out, (state, conv_tail) = ssm_lib.apply_ssm(
+            p, h, n_heads=cfg.ssm_heads, d_state=cfg.ssm_state,
+            d_conv=cfg.d_conv, chunk=cfg.ssm_chunk, n_groups=cfg.ssm_groups)
+        x = x + out
+        cache_seed = (state, conv_tail) if want_cache else ()
+        return x, cache_seed, aux
+    if fam == "hybrid":
+        attn_out, (k, v) = _attn_block(cfg, p, x, positions, window,
+                                       causal=causal)
+        h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+        ssm_out, (state, conv_tail) = ssm_lib.apply_ssm(
+            p, h, n_heads=cfg.ssm_heads, d_state=cfg.ssm_state,
+            d_conv=cfg.d_conv, chunk=cfg.ssm_chunk, n_groups=cfg.ssm_groups)
+        mixed = 0.5 * (rmsnorm(attn_out, p["attn_branch_norm"], cfg.norm_eps)
+                       + rmsnorm(ssm_out, p["ssm_branch_norm"], cfg.norm_eps))
+        x = x + mixed
+        x = x + _mlp_block(cfg, p, x)
+        cache_seed = (k, v, state, conv_tail) if want_cache else ()
+        return x, cache_seed, aux
+    # attention families
+    attn_out, (k, v) = _attn_block(cfg, p, x, positions, window, causal=causal)
+    x = x + attn_out
+    if enc_out is not None:
+        x = x + _cross_attn_block(cfg, p, x, enc_out)
+    if fam == "moe":
+        h = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+        moe_out, aux = moe_lib.apply_moe(
+            p, h, top_k=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor,
+            act=activation(cfg.act), routing=cfg.routing,
+            groups=cfg.moe_groups, constrain_fn=weight_constrain)
+        x = x + moe_out
+    else:
+        x = x + _mlp_block(cfg, p, x)
+    cache_seed = (k, v) if want_cache else ()
+    return x, cache_seed, aux
+
+
+def _scan_stack(cfg: ModelConfig, blocks, x, positions, windows, *,
+                causal=True, enc_out=None, want_cache=False, remat=None,
+                weight_constrain=None):
+    """lax.scan over stacked layer params."""
+    remat = cfg.remat if remat is None else remat
+
+    def body(carry, xs):
+        p, window = xs
+        y, seed, aux = _apply_block(cfg, p, carry, positions, window,
+                                    causal=causal, enc_out=enc_out,
+                                    want_cache=want_cache,
+                                    weight_constrain=weight_constrain)
+        return y, (seed, aux.get("moe_aux_loss", jnp.zeros((), jnp.float32)))
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    x, (seeds, moe_aux) = lax.scan(body, x, (blocks, windows))
+    return x, seeds, jnp.sum(moe_aux)
+
+
+# ---------------------------------------------------------------------------
+# Model facade
+# ---------------------------------------------------------------------------
+
+class LM:
+    """Functional LM with init/forward/prefill/decode, config-driven family."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.defs = build_defs(cfg)
+
+    # -- params ------------------------------------------------------------
+    def init(self, key):
+        return init_params(self.defs, key)
+
+    def specs(self):
+        return param_specs(self.defs)
+
+    def shardings(self, rules: ShardingRules, mesh):
+        return param_shardings(self.defs, rules, mesh)
+
+    def abstract(self, rules: ShardingRules, mesh):
+        return abstract_params(self.defs, rules, mesh)
+
+    def param_count(self) -> int:
+        return count_params(self.defs)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE discount on expert weights)."""
+        cfg = self.cfg
+        total = count_params(self.defs)
+        if cfg.num_experts:
+            expert = 3 * cfg.d_model * cfg.moe_d_ff * cfg.num_layers
+            total -= expert * (cfg.num_experts - cfg.experts_per_token)
+        return total
+
+    # -- embedding ---------------------------------------------------------
+    def _embed(self, params, tokens_or_embeds):
+        cfg = self.cfg
+        if cfg.embeds_input and tokens_or_embeds.dtype != jnp.int32:
+            x = tokens_or_embeds.astype(COMPUTE_DTYPE)
+        else:
+            x = embed_lookup(params["embed"], tokens_or_embeds, COMPUTE_DTYPE)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), COMPUTE_DTYPE)
+        return x
+
+    def _logits(self, params, x, mesh, rules):
+        cfg = self.cfg
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            w = params["embed"].astype(COMPUTE_DTYPE)   # (V@model, d)
+            logits = jnp.einsum("bsd,vd->bsv", x, w)
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x,
+                                params["unembed"].astype(COMPUTE_DTYPE))
+        return constrain(logits, ("batch", "seq", "vocab"), rules, mesh)
+
+    # -- training forward ---------------------------------------------------
+    def forward(self, params, batch, mesh, rules: ShardingRules):
+        """batch: {tokens|embeds, [src_embeds]} -> (logits fp32, aux)."""
+        cfg = self.cfg
+        x = self._embed(params, batch.get("embeds", batch.get("tokens")))
+        x = constrain(x, ("batch", "seq", "act_embed"), rules, mesh)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        windows = jnp.asarray(cfg.window_pattern())
+
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_x = batch["src_embeds"].astype(COMPUTE_DTYPE)
+            enc_windows = jnp.full((cfg.encoder_layers,), -1, jnp.int32)
+            enc_pos = jnp.arange(enc_x.shape[1], dtype=jnp.int32)
+            enc_cfg = dataclasses.replace(cfg, family="dense", post_norms=False)
+            enc_out, _, _ = _scan_stack(enc_cfg, params["enc_blocks"], enc_x,
+                                        enc_pos, enc_windows, causal=False)
+            enc_out = rmsnorm(enc_out, params["enc_final_norm"], cfg.norm_eps)
+
+        wc = (lambda arr, axes: constrain(arr, axes, rules, mesh)) \
+            if mesh is not None else None
+        x, _, moe_aux = _scan_stack(cfg, params["blocks"], x, positions,
+                                    windows, causal=True, enc_out=enc_out,
+                                    weight_constrain=wc)
+        logits = self._logits(params, x, mesh, rules).astype(jnp.float32)
+        return logits, {"moe_aux_loss": moe_aux}
+
+    # -- inference ----------------------------------------------------------
+    def cache_defs(self, B: int, S: int):
+        """ParamDef pytree for the decode cache (shapes + logical axes)."""
+        cfg = self.cfg
+        L, Hkv, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        kv_axes = ("layers", "kv_batch", "kv_seq", None, None)
+        defs = {}
+        if cfg.family in ("dense", "moe", "hybrid", "encdec"):
+            defs["k"] = ParamDef((L, B, S, Hkv, Dh), kv_axes,
+                                 dtype=COMPUTE_DTYPE, init="zeros")
+            defs["v"] = ParamDef((L, B, S, Hkv, Dh), kv_axes,
+                                 dtype=COMPUTE_DTYPE, init="zeros")
+        if cfg.family in ("ssm", "hybrid"):
+            P_ = cfg.d_inner // cfg.ssm_heads
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+            defs["state"] = ParamDef(
+                (L, B, cfg.ssm_heads, P_, cfg.ssm_state),
+                ("layers", "kv_batch", "ssm_head", None, None),
+                dtype=COMPUTE_DTYPE, init="zeros")
+            defs["conv"] = ParamDef(
+                (L, B, cfg.d_conv - 1, conv_dim),
+                ("layers", "kv_batch", None, None),
+                dtype=COMPUTE_DTYPE, init="zeros")
+        if cfg.family == "encdec":
+            enc_S = max(1, S // cfg.enc_seq_divisor)
+            defs["cross_k"] = ParamDef((L, B, enc_S, Hkv, Dh),
+                                       ("layers", "kv_batch", "enc_seq", None,
+                                        None), dtype=COMPUTE_DTYPE, init="zeros")
+            defs["cross_v"] = ParamDef((L, B, enc_S, Hkv, Dh),
+                                       ("layers", "kv_batch", "enc_seq", None,
+                                        None), dtype=COMPUTE_DTYPE, init="zeros")
+        return defs
+
+    def init_cache(self, B: int, S: int):
+        return jax.tree.map(lambda d: jnp.zeros(d.shape, d.dtype),
+                            self.cache_defs(B, S),
+                            is_leaf=lambda x: isinstance(x, ParamDef))
+
+    def prefill(self, params, batch, mesh, rules: ShardingRules):
+        """Forward + emit per-layer cache seeds; returns (last_logits, cache)."""
+        cfg = self.cfg
+        x = self._embed(params, batch.get("embeds", batch.get("tokens")))
+        x = constrain(x, ("batch", "seq", "act_embed"), rules, mesh)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        windows = jnp.asarray(cfg.window_pattern())
+
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_x = batch["src_embeds"].astype(COMPUTE_DTYPE)
+            enc_windows = jnp.full((cfg.encoder_layers,), -1, jnp.int32)
+            enc_pos = jnp.arange(enc_x.shape[1], dtype=jnp.int32)
+            enc_cfg = dataclasses.replace(cfg, family="dense", post_norms=False)
+            enc_out, _, _ = _scan_stack(enc_cfg, params["enc_blocks"], enc_x,
+                                        enc_pos, enc_windows, causal=False)
+            enc_out = rmsnorm(enc_out, params["enc_final_norm"], cfg.norm_eps)
+
+        wc = (lambda arr, axes: constrain(arr, axes, rules, mesh)) \
+            if mesh is not None else None
+        x, seeds, _ = _scan_stack(cfg, params["blocks"], x, positions, windows,
+                                  causal=True, enc_out=enc_out, want_cache=True,
+                                  remat="none", weight_constrain=wc)
+        cache = {}
+        if cfg.family in ("dense", "moe", "encdec"):
+            cache["k"], cache["v"] = seeds[0], seeds[1]
+        elif cfg.family == "ssm":
+            cache["state"], cache["conv"] = seeds[0], seeds[1]
+        elif cfg.family == "hybrid":
+            cache["k"], cache["v"], cache["state"], cache["conv"] = seeds
+        if cfg.family == "encdec":
+            # Cross K/V computed once per layer at prefill.
+            def cross_kv(p, eo):
+                k = jnp.einsum("bsd,dhk->bshk", eo, p["wk_c"].astype(eo.dtype))
+                v = jnp.einsum("bsd,dhk->bshk", eo, p["wv_c"].astype(eo.dtype))
+                return k, v
+            ck, cv = jax.vmap(lambda p: cross_kv(p, enc_out))(
+                {k: params["blocks"][k] for k in ("wk_c", "wv_c")})
+            cache["cross_k"], cache["cross_v"] = ck, cv
+        logits = self._logits(params, x[:, -1:, :], mesh, rules)
+        return logits.astype(jnp.float32), cache
+
+    def decode_step(self, params, tokens, cache, position, mesh,
+                    rules: ShardingRules):
+        """One-token decode. tokens: (B, 1). position: scalar int32 (current
+        write index; attention sees [0, position]).  Returns (logits, cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        B = x.shape[0]
+        pos_arr = jnp.full((B, 1), position, jnp.int32)
+        windows = jnp.asarray(cfg.window_pattern())
+
+        has_kv = cfg.family in ("dense", "moe", "hybrid", "encdec")
+        if has_kv:
+            S = cache["k"].shape[2]
+            model_size = mesh.shape.get("model", 1)
+            seq_sharded = S % model_size == 0 and model_size > 1
+            batch_axes = None
+            if B % max(1, np.prod([mesh.shape.get(a, 1)
+                                   for a in ("pod", "data")])) == 0:
+                present = tuple(a for a in ("pod", "data") if a in mesh.shape)
+                batch_axes = present if len(present) > 1 else (
+                    present[0] if present else None)
+            if seq_sharded:
+                attn_fn = sharded_decode_attention(
+                    mesh, batch_axes=batch_axes)
+            else:
+                attn_fn = None
+
+        def body(carry, xs):
+            x = carry
+            p, window, layer_cache = xs
+            aux_moe = jnp.zeros((), jnp.float32)
+            new_cache = {}
+            if cfg.family == "ssm":
+                h = rmsnorm(x, p["ssm_norm"], cfg.norm_eps)
+                out, st, cv = ssm_lib.apply_ssm_decode(
+                    p, h, layer_cache["state"], layer_cache["conv"],
+                    n_heads=cfg.ssm_heads, d_state=cfg.ssm_state,
+                    d_conv=cfg.d_conv, n_groups=cfg.ssm_groups)
+                x = x + out
+                new_cache = {"state": st, "conv": cv}
+                return x, (new_cache, aux_moe)
+
+            # attention branch (dense/moe/hybrid/encdec)
+            h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+            q, k_new, v_new = _project_qkv(cfg, p, h)
+            q, k_new = _rope_qk(cfg, q, k_new, pos_arr)
+            q1 = q[:, 0]                                   # (B, H, Dh)
+            if attn_fn is not None:
+                out, ck, cv_ = attn_fn(q1, k_new, v_new,
+                                       layer_cache["k"], layer_cache["v"],
+                                       position, window)
+            else:
+                ck = lax.dynamic_update_slice(
+                    layer_cache["k"], k_new, (0, position, 0, 0))
+                cv_ = lax.dynamic_update_slice(
+                    layer_cache["v"], v_new, (0, position, 0, 0))
+                out = decode_attention_local(q1, ck, cv_, position + 1,
+                                             window=window)
+            attn_out = jnp.einsum("bhk,hkd->bd", out,
+                                  p["wo"].astype(x.dtype))[:, None, :]
+            if cfg.post_norms:
+                attn_out = rmsnorm(attn_out, p["post_attn_norm"], cfg.norm_eps)
+            new_cache = {"k": ck, "v": cv_}
+
+            if cfg.family == "hybrid":
+                out_s, st, cvv = ssm_lib.apply_ssm_decode(
+                    p, h, layer_cache["state"], layer_cache["conv"],
+                    n_heads=cfg.ssm_heads, d_state=cfg.ssm_state,
+                    d_conv=cfg.d_conv, n_groups=cfg.ssm_groups)
+                mixed = 0.5 * (rmsnorm(attn_out, p["attn_branch_norm"],
+                                       cfg.norm_eps)
+                               + rmsnorm(out_s, p["ssm_branch_norm"],
+                                         cfg.norm_eps))
+                x = x + mixed
+                x = x + _mlp_block(cfg, p, x)
+                new_cache.update({"state": st, "conv": cvv})
+                return x, (new_cache, aux_moe)
+
+            x = x + attn_out
+            if cfg.family == "encdec":
+                hq = rmsnorm(x, p["cross_norm"], cfg.norm_eps)
+                qc = jnp.einsum("bsd,dhk->bshk", hq, p["wq_c"].astype(x.dtype))
+                enc_S = layer_cache["cross_k"].shape[1]
+                out_c = decode_attention_local(
+                    qc[:, 0], layer_cache["cross_k"], layer_cache["cross_v"],
+                    enc_S, window=jnp.int32(0))
+                x = x + jnp.einsum("bhk,hkd->bd", out_c,
+                                   p["wo_c"].astype(x.dtype))[:, None, :]
+                new_cache["cross_k"] = layer_cache["cross_k"]
+                new_cache["cross_v"] = layer_cache["cross_v"]
+            if cfg.family == "moe":
+                h2 = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+                moe_out, aux = moe_lib.apply_moe(
+                    p, h2, top_k=cfg.experts_per_token,
+                    capacity_factor=max(2.0, cfg.capacity_factor),
+                    act=activation(cfg.act), routing=cfg.routing,
+                    groups=cfg.moe_groups)
+                x = x + moe_out
+                aux_moe = aux["moe_aux_loss"]
+            else:
+                x = x + _mlp_block(cfg, p, x)
+            return x, (new_cache, aux_moe)
+
+        x, (new_cache, _) = lax.scan(body, x,
+                                     (params["blocks"], windows, cache))
+        logits = self._logits(params, x, mesh, rules)
+        return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,4 @@
+"""Optimizers, LR schedules, gradient compression."""
+
+from repro.optim.adamw import Optimizer, adamw, clip_by_global_norm, lion, sgd
+from repro.optim.schedules import constant, warmup_cosine

@@ -1,0 +1,108 @@
+"""Gradient compression for the lowest-bandwidth link (the cross-pod
+'pod' axis carries only gradient traffic — DESIGN.md §3).
+
+Two standard schemes, both with *error feedback* (the residual of the
+lossy step is added back into the next step's gradient, which is what
+keeps convergence; Stich et al. / 1-bit Adam lineage):
+
+* ``int8``  — per-tensor symmetric quantization: 4x fewer bytes on the
+  wire for fp32 grads (2x vs bf16).
+* ``topk``  — magnitude top-k sparsification: k/n of the bytes plus
+  indices; the GNN analogue of "ship the subgraph, not the edge list"
+  applied to gradients.
+
+API is functional: ``init_error(params)`` -> residual pytree;
+``compress(grads, err)`` -> (wire, new_err); ``decompress(wire)`` -> grads.
+The wire format is a pytree of regular arrays, so it composes with psum /
+pjit over the pod axis with no custom collectives.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# int8 symmetric quantization
+# ---------------------------------------------------------------------------
+
+def _q8(x):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dq8(w):
+    return w["q"].astype(jnp.float32) * w["scale"]
+
+
+def compress_int8(grads, err):
+    """Returns (wire pytree of {q, scale}, new error residuals)."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        w = _q8(x)
+        return w, x - _dq8(w)
+    flat = jax.tree.map(one, grads, err,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray)
+                        or hasattr(x, "shape"))
+    wire = jax.tree.map(lambda o: o[0], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return wire, new_err
+
+
+def decompress_int8(wire):
+    return jax.tree.map(_dq8, wire,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification
+# ---------------------------------------------------------------------------
+
+def compress_topk(grads, err, *, frac: float = 0.05):
+    """Keep the top ``frac`` entries by magnitude per tensor."""
+    def one(g, e):
+        x = (g.astype(jnp.float32) + e).reshape(-1)
+        k = max(1, int(frac * x.size))
+        vals, idx = jax.lax.top_k(jnp.abs(x), k)
+        kept = x[idx]
+        resid = x.at[idx].set(0.0)
+        return ({"values": kept, "indices": idx.astype(jnp.int32),
+                 "shape": g.shape}, resid.reshape(g.shape))
+    flat = jax.tree.map(one, grads, err,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+    wire = jax.tree.map(lambda o: o[0], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return wire, new_err
+
+
+def decompress_topk(wire):
+    def one(w):
+        n = 1
+        for d in w["shape"]:
+            n *= d
+        out = jnp.zeros((n,), jnp.float32).at[w["indices"]].set(w["values"])
+        return out.reshape(w["shape"])
+    return jax.tree.map(one, wire,
+                        is_leaf=lambda x: isinstance(x, dict) and "values" in x)
+
+
+def wire_bytes(wire) -> int:
+    """Bytes a wire pytree puts on the link (for the roofline's pod term)."""
+    total = 0
+    for leaf in jax.tree.leaves(wire):
+        if hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += leaf.size * leaf.dtype.itemsize
+    return int(total)

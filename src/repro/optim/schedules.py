@@ -1,0 +1,24 @@
+"""LR schedules (pure functions of step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (step + 1) / max(1, warmup_steps)
+        t = jnp.clip((step - warmup_steps)
+                     / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def constant(lr_val: float):
+    def lr(step):
+        return jnp.asarray(lr_val, jnp.float32)
+    return lr

@@ -1,0 +1,184 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+  compute    = HLO_FLOPs_total   / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes_total   / (chips * HBM_BW)
+  collective = link_bytes_per_chip / LINK_BW
+
+``cost_analysis()`` on the compiled executable reports *per-device*
+post-SPMD flops / bytes; collective bytes are not reported there, so we
+parse the optimized HLO text (``compiled.as_text()``), find every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+extract result shapes and participant-group sizes, and apply standard ring
+cost factors to get per-chip link traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip) — from the assignment brief.
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO instruction result:  `%name = bf16[8,128]{1,0} all-gather(...)`
+# or tuple results:            `%name = (f32[4], f32[4]) all-reduce(...)`
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?\)?)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"(\(|\.|\s)")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shapes_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    result_bytes: dict[str, int]      # sum of result-shape bytes (global view)
+    link_bytes_per_chip: float        # ring-model traffic per chip
+
+    def total_result_bytes(self) -> int:
+        return sum(self.result_bytes.values())
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    result_bytes: dict[str, int] = {}
+    link = 0.0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        if "done" in line.split("=")[1][:60]:
+            continue
+        nbytes = _shape_bytes(shapes_str)
+        if nbytes == 0:
+            continue
+        g = max(2, _group_size(line, n_devices))
+        counts[op] = counts.get(op, 0) + 1
+        result_bytes[op] = result_bytes.get(op, 0) + nbytes
+        # Ring-model per-chip traffic.  Result shapes in the *partitioned*
+        # module are per-participant-set shard shapes.
+        frac = (g - 1) / g
+        if op == "all-gather":
+            link += nbytes * frac                 # result is the gathered buf
+        elif op == "all-reduce":
+            link += 2.0 * nbytes * frac           # reduce-scatter + all-gather
+        elif op == "reduce-scatter":
+            link += nbytes * g * frac             # operand = result * g
+        elif op == "all-to-all":
+            link += nbytes * frac
+        elif op == "collective-permute":
+            link += nbytes
+    return CollectiveStats(counts=counts, result_bytes=result_bytes,
+                           link_bytes_per_chip=link)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    bytes_per_chip: float
+    link_bytes_per_chip: float
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    model_flops_per_chip: float
+    useful_flops_ratio: float
+    step_time_s: float               # max of the three terms
+    roofline_fraction: float         # model-flops-time / step_time
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def compute_terms_from_costs(module_costs, n_chips: int,
+                             model_flops_total: float) -> RooflineTerms:
+    """module_costs: hlo_parse.ModuleCosts — trip-count-aware per-device
+    flops / HBM bytes / ring-model link bytes from the optimized HLO."""
+    flops = float(module_costs.flops)
+    bytes_ = float(module_costs.hbm_bytes)
+    link = float(module_costs.link_bytes)
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_ / HBM_BW
+    collective_s = link / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound = max(terms, key=terms.get)
+    model_flops_per_chip = model_flops_total / n_chips
+    useful = model_flops_per_chip / flops if flops else 0.0
+    step = max(compute_s, memory_s, collective_s)
+    ideal = model_flops_per_chip / PEAK_FLOPS
+    frac = ideal / step if step > 0 else 0.0
+    return RooflineTerms(
+        flops_per_chip=flops, bytes_per_chip=bytes_,
+        link_bytes_per_chip=link, n_chips=n_chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bound=bound, model_flops_per_chip=model_flops_per_chip,
+        useful_flops_ratio=useful, step_time_s=step, roofline_fraction=frac)
+
+
+def model_flops(cfg, shape, active_params: int) -> float:
+    """Useful model FLOPs for the cell (global, not per-chip).
+
+    train:   6 * N_active * tokens   (fwd 2ND + bwd 4ND)
+    prefill: 2 * N_active * tokens
+    decode:  2 * N_active * batch    (one token per sequence)
+    Attention O(S^2) FLOPs are excluded by convention (kept conservative);
+    the HLO-vs-model ratio therefore over-counts "waste" slightly for long
+    sequences — noted in EXPERIMENTS.md.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * active_params * B * S
+    if shape.kind == "prefill":
+        return 2.0 * active_params * B * S
+    return 2.0 * active_params * B

@@ -1,0 +1,327 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, but our
+models are built from lax.scan loops (layer stack, microbatch accumulation,
+attention chunking), so flops / bytes / collective traffic must be scaled
+by loop trip counts.  This module parses the optimized HLO module text into
+its computations, builds the call graph (while bodies, fusions, calls),
+extracts each while loop's trip count from its condition computation
+(lax.scan lowers to ``compare(iv, constant(N), LT)``), and accumulates:
+
+  * flops            — from dot/convolution result shapes x contracting dims
+  * hbm_bytes        — per top-level instruction: operand + result bytes
+                       (a fusion reads its inputs and writes its outputs
+                       once — the TPU HBM-traffic abstraction)
+  * collective bytes — ring-model per-chip link traffic per collective op
+
+All three are multiplied by the instruction's call-path multiplicity.
+Validated against analytic counts in tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# A computation header is `%name (args...) -> result {` (no ` = `);
+# an instruction line always contains ` = `.
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*"n":"(\d+)"')
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shapes_in(text: str):
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        yield dt, n, n * _DTYPE_BYTES[dt]
+
+
+def _first_shape(text: str):
+    for dt, n, b in _shapes_in(text):
+        return dt, n, b
+    return None
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    result_text: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: list
+    callees: list      # (name, kind) kind in {while, fusion, call, cond}
+    while_bodies: list # (body_name, cond_name, trip_count_or_None)
+    symbols: dict = dataclasses.field(default_factory=dict)  # name -> dims
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\(")
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        # strip /*index=N*/-style comments: their '=' breaks op matching
+        line = re.sub(r"/\*.*?\*/", "", raw).rstrip()
+        if " = " not in line and line.endswith("{") and "->" in line:
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                name = hdr.group(1)
+                cur = Computation(name=name, instructions=[], callees=[],
+                                  while_bodies=[])
+                comps[name] = cur
+                if line.lstrip().startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        iname, result_text, op = m.group(1), m.group(2), m.group(3)
+        cur.instructions.append(Instruction(iname, result_text, op, line))
+        sm = _SHAPE_RE.search(result_text)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            nbytes = float(sum(b for _, _, b in _shapes_in(result_text)))
+            cur.symbols[iname] = (dims, nbytes)
+        if op == "while":
+            cm = re.search(r"condition=%?([\w.\-]+)", line)
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            tm = _TRIP_RE.search(line)
+            if cm and bm:
+                cur.while_bodies.append(
+                    (bm.group(1), cm.group(1),
+                     int(tm.group(1)) if tm else None))
+        elif op == "fusion":
+            fm = re.search(r"calls=%?([\w.\-]+)", line)
+            if fm:
+                cur.callees.append((fm.group(1), "fusion"))
+        elif op in ("call", "async-start"):
+            tm = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if tm:
+                cur.callees.append((tm.group(1), "call"))
+        elif op == "conditional":
+            bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    cur.callees.append((b.strip().lstrip("%"), "cond"))
+        elif op in ("reduce", "reduce-window", "scatter", "sort", "map",
+                    "select-and-scatter", "reduce-scatter", "all-reduce"):
+            tm = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if tm:
+                cur.callees.append((tm.group(1), "call"))
+    return comps
+
+
+def _trip_count(cond: Computation | None, comps: dict) -> int:
+    """Fallback when backend_config lacks known_trip_count: lax.scan
+    while-conditions compare the induction var against constant(N); the
+    compare may sit inside a wrapped fusion computation."""
+    if cond is None:
+        return 1
+    best = 1
+    stack, seen = [cond], set()
+    while stack:
+        c = stack.pop()
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        for ins in c.instructions:
+            # The loop bound is either inline in the compare or (after
+            # optimization) a separate `%c = s32[] constant(N)` feeding it;
+            # cond computations are tiny, so take the max int constant seen.
+            cm = _CONST_RE.search(ins.line)
+            if cm:
+                best = max(best, int(cm.group(1)))
+        for callee, _ in c.callees:
+            if callee in comps:
+                stack.append(comps[callee])
+    return best
+
+
+_OPERANDS_RE = re.compile(r"\(%([\w.\-]+)(?:,\s*%([\w.\-]+))*")
+
+
+def _dot_flops(ins: Instruction, symbols: dict) -> float:
+    shape = _first_shape(ins.result_text)
+    if shape is None:
+        return 0.0
+    _, result_elems, _ = shape
+    # contraction size: lhs operand's dims at lhs_contracting_dims
+    om = re.search(r"dot\(%([\w.\-]+)", ins.line)
+    cd = _DOT_DIMS_RE.search(ins.line)
+    contract = 1
+    if cd and om:
+        lhs_dims = symbols.get(om.group(1), ([], 0.0))[0]
+        for idx in cd.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * result_elems * contract
+
+
+def _operand_names(ins: Instruction) -> list[str]:
+    start = ins.line.find(ins.op + "(")
+    if start < 0:
+        return []
+    seg = ins.line[start + len(ins.op) + 1:]
+    end = seg.find(")")
+    seg = seg[:end] if end >= 0 else seg
+    return re.findall(r"%([\w.\-]+)", seg)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _instr_bytes(ins: Instruction, symbols: dict) -> float:
+    """Result bytes (written once) + operand bytes (read once)."""
+    total = float(sum(b for _, _, b in _shapes_in(ins.result_text)))
+    for name in _operand_names(ins):
+        total += symbols.get(name, ([], 0.0))[1]
+    return total
+
+
+def _result_bytes(ins: Instruction) -> float:
+    return float(sum(b for _, _, b in _shapes_in(ins.result_text)))
+
+
+# HBM-traffic model: bytes move at *materialization boundaries* — matmuls,
+# fusions, reductions, data movement/layout ops with real copies, scatters/
+# gathers, collectives.  Pure elementwise/broadcast/compare ops between them
+# are assumed fused into their producer/consumer (the XLA-TPU fusion
+# abstraction; the CPU backend we compile on fuses less, which would
+# otherwise inflate the memory term ~10x — validated in test_roofline.py).
+_COUNT_BYTES_OPS = {
+    "fusion", "dot", "convolution", "reduce", "reduce-window", "scatter",
+    "gather", "dynamic-slice", "dynamic-update-slice", "concatenate",
+    "sort", "select-and-scatter", "rng", "rng-bit-generator", "custom-call",
+    "cholesky", "triangular-solve", "fft", "copy", "copy-start",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "copy-done",
+}
+
+
+@dataclasses.dataclass
+class ModuleCosts:
+    flops: float
+    hbm_bytes: float
+    link_bytes: float
+    collective_counts: dict[str, float]
+    collective_bytes: dict[str, float]
+    loop_trip_counts: dict[str, int]
+
+
+def analyze(hlo: str, n_devices: int) -> ModuleCosts:
+    comps = parse_module(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    flops = 0.0
+    hbm = 0.0
+    link = 0.0
+    ccounts: dict[str, float] = {}
+    cbytes: dict[str, float] = {}
+    trips: dict[str, int] = {}
+
+    visited_stack = set()
+
+    def walk(comp: Computation, mult: float):
+        nonlocal flops, hbm, link
+        if comp.name in visited_stack:
+            return
+        visited_stack.add(comp.name)
+        for ins in comp.instructions:
+            if ins.op == "dot":
+                flops += mult * _dot_flops(ins, comp.symbols)
+            if ins.op.startswith(tuple(_COLLECTIVE_OPS)):
+                base = next((c for c in _COLLECTIVE_OPS
+                             if ins.op.startswith(c)), None)
+                if base and not ins.op.endswith("-done"):
+                    nbytes = _result_bytes(ins)
+                    g = max(2, _group_size(ins.line, n_devices))
+                    frac = (g - 1) / g
+                    factor = {"all-gather": frac, "all-reduce": 2 * frac,
+                              "reduce-scatter": g * frac,
+                              "all-to-all": frac,
+                              "collective-permute": 1.0}[base]
+                    link += mult * nbytes * factor
+                    ccounts[base] = ccounts.get(base, 0) + mult
+                    cbytes[base] = cbytes.get(base, 0) + mult * nbytes
+            if ins.op in _COUNT_BYTES_OPS:
+                # HBM abstraction: materialization boundaries read operands
+                # and write results once.  Fusions: count the fusion
+                # boundary (operands+result), not the internals.
+                hbm += mult * _instr_bytes(ins, comp.symbols)
+        # recurse
+        for callee, kind in comp.callees:
+            sub = comps.get(callee)
+            if sub is not None and kind == "fusion":
+                # fusion internals: only dots/collectives counted (bytes are
+                # accounted at the fusion boundary above)
+                walk_fusion(sub, mult)
+            elif sub is not None:
+                walk(sub, mult)
+        for body_name, cond_name, trip in comp.while_bodies:
+            body = comps.get(body_name)
+            n = trip if trip else _trip_count(comps.get(cond_name), comps)
+            trips[body_name] = n
+            if body is not None:
+                walk(body, mult * n)
+        visited_stack.discard(comp.name)
+
+    def walk_fusion(comp: Computation, mult: float):
+        nonlocal flops, link
+        if comp.name in visited_stack:
+            return
+        visited_stack.add(comp.name)
+        for ins in comp.instructions:
+            if ins.op == "dot":
+                flops += mult * _dot_flops(ins, comp.symbols)
+        for callee, kind in comp.callees:
+            sub = comps.get(callee)
+            if sub is not None:
+                walk_fusion(sub, mult)
+        visited_stack.discard(comp.name)
+
+    walk(entry, 1.0)
+    return ModuleCosts(flops=flops, hbm_bytes=hbm, link_bytes=link,
+                       collective_counts=ccounts, collective_bytes=cbytes,
+                       loop_trip_counts=trips)

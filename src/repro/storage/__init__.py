@@ -1,0 +1,14 @@
+"""Storage-tier simulator: replays real sampler traces against device
+models of the paper's six design points (DESIGN.md §2)."""
+
+from repro.storage.blockdev import (EDGE_ENTRY_BYTES, BlockTrace, LRUCache,
+                                    PinnedCache, block_trace)
+from repro.storage.e2e import (E2EResult, capacity_report, e2e_train,
+                               feature_gather_time, gnn_step_flops,
+                               gpu_step_time)
+from repro.storage.engines import (ENGINES, BatchCost, DirectIOEngine,
+                                   DRAMEngine, FPGACSDEngine, ISPEngine,
+                                   ISPOracleEngine, MmapSSDEngine,
+                                   PMEMEngine, StorageEngine, make_engine,
+                                   throughput)
+from repro.storage.specs import DEFAULT, SystemSpec

@@ -1,0 +1,95 @@
+"""Device constants for the storage-tier simulator.
+
+The simulator replays *real* access traces (block fetches, commands, bytes
+— produced by the actual samplers on actual synthetic graphs) against these
+device models.  Event counts are algorithmic; only time-per-event comes
+from the constants below.  Values are drawn from the paper's platform
+(§V: Xeon Gold 6242 + 192 GB DRAM, Cosmos+ OpenSSD over PCIe gen2 x8,
+dual Cortex-A9 firmware cores; §III-B: 125 GB/s DRAM peak) and public
+OpenSSD/NVMe literature.  EXPERIMENTS.md §Paper-claims reports the
+sensitivity of the reproduced ratios to these constants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HostSpec:
+    dram_bw: float = 125e9          # B/s   (paper Fig. 5: max memory thpt)
+    dram_latency: float = 90e-9     # s     random-access load latency
+    sample_cpu_time: float = 50e-9  # s     per sampled neighbor (host CPU)
+    n_workers_max: int = 12         # paper: best at 12 workers
+    gpu_flops: float = 65e12 * 0.05  # T4 fp16 peak x achieved GNN MFU
+    gpu_step_overhead: float = 8e-3  # s    launch/PCIe/optimizer floor
+    pcie_bw: float = 3.2e9          # B/s   PCIe gen2 x8 (OpenSSD host link)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDSpec:
+    block_bytes: int = 4096         # logical block (the paper's 4 KB chunks)
+    flash_page_bytes: int = 16384   # NAND page
+    flash_read_latency: float = 70e-6   # s per page read
+    channels: int = 8               # internal flash parallelism
+    queue_depth: int = 10            # per-channel outstanding page reads
+    cmd_parallel: int = 16          # page reads one NS_config keeps in flight
+    pcie_bw: float = 3.2e9          # B/s SSD<->host
+    nvme_cmd_overhead: float = 10e-6    # s per NVMe command (submit+complete)
+    # mmap path: page-fault service = kernel crossing + page-cache insert
+    page_fault_overhead: float = 30e-6  # s ("several tens of microseconds")
+    page_cache_hit_time: float = 250e-9  # s (page-table walk + DRAM)
+    # direct-I/O path: thin user-space submit, no page-cache maintenance
+    directio_overhead: float = 5e-6     # s per I/O
+    scratchpad_hit_time: float = 120e-9  # s (user-space buffer, no kernel)
+    max_iops: float = 400e3         # device random-read IOPS ceiling
+
+
+@dataclasses.dataclass(frozen=True)
+class ISPSpec:
+    """Firmware-based CSD (OpenSSD: dual Cortex-A9 @1 GHz, shared w/ FTL)."""
+    embedded_cores: int = 2
+    ftl_share: float = 0.3          # fraction of core time owned by FTL
+    sample_core_time: float = 0.2e-6    # s per sampled neighbor (wimpy core)
+    dram_buffer_bw: float = 4.0e9   # B/s SSD-internal DRAM page buffer
+    nsconfig_entry_bytes: int = 64  # per-target metadata in NS_config
+    # oracle variant (NGD Newport-class): dedicated quad A53 for ISP
+    oracle_cores: int = 4
+    oracle_ftl_share: float = 0.0
+    oracle_sample_core_time: float = 0.4e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class FPGASpec:
+    """FPGA-based CSD (SmartSSD): two-step P2P over an internal PCIe switch."""
+    p2p_bw: float = 2.5e9           # B/s SSD->FPGA (shared PCIe switch)
+    p2p_latency: float = 15e-6      # s per P2P transfer setup
+    fpga_sample_time: float = 50e-9  # s per sample (hardwired gather unit)
+    fpga_to_host_bw: float = 2.5e9  # B/s FPGA->CPU
+
+
+@dataclasses.dataclass(frozen=True)
+class PMEMSpec:
+    """Intel Optane DC PMEM on the memory bus (NVDIMM)."""
+    latency: float = 1.0e-6         # s random load under concurrent access
+    bw: float = 8e9                 # B/s sustained random read
+    capacity: int = 768 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    host: HostSpec = HostSpec()
+    ssd: SSDSpec = SSDSpec()
+    isp: ISPSpec = ISPSpec()
+    fpga: FPGASpec = FPGASpec()
+    pmem: PMEMSpec = PMEMSpec()
+    dram_capacity: int = 192 << 30  # paper host DRAM
+    # fraction of the edge-list array that fits in the OS page cache /
+    # user scratchpad for LARGE-scale datasets (paper: working set >> DRAM;
+    # Table I large-scale arrays are 2-10x the 192 GB host DRAM, of which
+    # only part is available for caching)
+    page_cache_fraction: float = 0.05
+    scratchpad_fraction: float = 0.05  # same budget, informed placement
+
+
+DEFAULT = SystemSpec()

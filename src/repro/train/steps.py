@@ -1,0 +1,150 @@
+"""Train / prefill / serve step builders.
+
+These are the functions the launcher jits (and the dry-run lowers).  They
+are pure: ``train_step(state, batch) -> (state, metrics)`` with donated
+state, so XLA updates parameters and optimizer moments in place.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.transformer import LM
+from repro.optim.adamw import Optimizer
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits, labels):
+    """logits: (B, S, V) fp32 (vocab possibly sharded); labels: (B, S).
+
+    Baseline (paper-faithful-naive) implementation: take_along_axis over
+    the vocab dim.  Under GSPMD with vocab sharded over 'model' this
+    gathers the FULL logits to every data shard — the §Perf log's first
+    hillclimb target; see ``cross_entropy_sharded``.
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def cross_entropy_sharded(logits, labels):
+    """Vocab-parallel CE: the label logit is selected with an iota-compare
+    mask, which is elementwise in the (sharded) vocab dim — GSPMD keeps
+    every operand vocab-sharded and the cross-shard traffic is one scalar
+    psum per token instead of an all-gather of (B, S, V) logits.  (The
+    Megatron vocab-parallel CE, GSPMD-style.)"""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    picked = jnp.where(vocab_iota == labels[..., None], logits, 0.0)
+    ll = jnp.sum(picked, axis=-1)
+    return jnp.mean(lse - ll)
+
+
+CE_IMPLS = {"gather": cross_entropy, "sharded": cross_entropy_sharded}
+
+
+def build_train_step(model: LM, optimizer: Optimizer, mesh,
+                     rules: ShardingRules, *, microbatches: int = 1,
+                     ce: str = "gather"):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches > 1`` splits the batch on the leading dim and accumulates
+    gradients with a lax.scan (the standard memory/throughput lever; a
+    §Perf knob).  ``ce`` picks the cross-entropy implementation
+    ("gather" baseline vs "sharded" vocab-parallel; §Perf).
+    """
+    ce_fn = CE_IMPLS[ce]
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, mesh, rules)
+        loss = ce_fn(logits, batch["labels"])
+        total = loss + MOE_AUX_WEIGHT * aux.get("moe_aux_loss", 0.0)
+        return total, {"loss": loss, "moe_aux": aux.get("moe_aux_loss", 0.0)}
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params, opt_state, step = state["params"], state["opt"], state["step"]
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            # Reshape (B, ...) -> (mb, B/mb, ...): the per-microbatch batch
+            # dim keeps the 'data' sharding (B/mb stays divisible by the
+            # data axis for all assigned cells).
+            def reshape_mb(x):
+                return x.reshape(
+                    (microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            def acc_body(carry, mb):
+                g_acc, m_acc = carry
+                (_, metrics), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                m_acc = jax.tree.map(jnp.add, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            zeros_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros_m = {"loss": jnp.zeros(()), "moe_aux": jnp.zeros(())}
+            (grads, metrics), _ = jax.lax.scan(
+                acc_body, (zeros_g, zeros_m),
+                jax.tree.map(reshape_mb, batch))
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, metrics)
+
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state, params, step)
+        metrics = dict(metrics, **opt_metrics)
+        return ({"params": new_params, "opt": new_opt, "step": step + 1},
+                metrics)
+
+    return train_step
+
+
+def build_prefill_step(model: LM, mesh, rules: ShardingRules):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, mesh, rules)
+    return prefill_step
+
+
+def build_serve_step(model: LM, mesh, rules: ShardingRules):
+    """One decode step: returns (logits, new_cache, next_token_greedy)."""
+
+    def serve_step(params, tokens, cache, position):
+        logits, new_cache = model.decode_step(params, tokens, cache, position,
+                                              mesh, rules)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return logits, new_cache, next_tok
+
+    return serve_step
+
+
+def init_train_state(model: LM, optimizer: Optimizer, key):
+    params = model.init(key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model: LM, optimizer: Optimizer, rules, mesh):
+    """ShapeDtypeStruct train state for dry-run lowering (no allocation).
+
+    Optimizer moment buckets mirror the param tree structure, so each bucket
+    inherits the corresponding parameter's NamedSharding (this is what makes
+    the Adam moments ZeRO-sharded in the memory analysis).
+    """
+    abs_params = model.abstract(rules, mesh)
+    opt_abs = jax.eval_shape(optimizer.init, abs_params)
+    opt_sharded = {
+        k: jax.tree.map(lambda l, p: jax.ShapeDtypeStruct(
+            l.shape, l.dtype, sharding=p.sharding), v, abs_params)
+        for k, v in opt_abs.items()
+    }
+    return {"params": abs_params, "opt": opt_sharded,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}

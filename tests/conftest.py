@@ -1,0 +1,31 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests see
+1 CPU device; multi-device behaviour is tested via subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh()
+
+
+@pytest.fixture(scope="session")
+def rules():
+    from repro.distributed.sharding import ShardingRules
+    return ShardingRules.default()
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.core import load_dataset
+    return load_dataset("reddit")
+
+
+@pytest.fixture(scope="session")
+def large_graph():
+    from repro.core import load_dataset
+    return load_dataset("amazon", large_scale=True)

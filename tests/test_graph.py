@@ -1,0 +1,72 @@
+"""CSR graph construction + Kronecker fractal expansion properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DATASETS, edges_to_csr, kronecker_expand,
+                        load_dataset, rmat_graph)
+
+
+def test_rmat_valid():
+    g = rmat_graph(512, 4096, seed=0)
+    g.validate()
+    assert g.num_nodes == 512
+    assert g.num_edges > 0
+
+
+def test_kronecker_growth_and_densification():
+    g = rmat_graph(512, 4096, seed=1)
+    big = kronecker_expand(g, factor=4, seed=2, edge_keep=0.6)
+    big.validate()
+    assert big.num_nodes == 4 * g.num_nodes
+    # densification power law: average degree must INCREASE (Fig. 13)
+    assert (big.num_edges / big.num_nodes) > (g.num_edges / g.num_nodes)
+
+
+def test_kronecker_preserves_power_law_shape():
+    g = rmat_graph(1024, 16384, seed=3)
+    big = kronecker_expand(g, factor=4, seed=4, edge_keep=0.5)
+    # compare log-log degree-distribution slope sign / heavy tail
+    for gr in (g, big):
+        deg = gr.degrees()
+        deg = deg[deg > 0]
+        # heavy tail: max degree >> median degree
+        assert deg.max() > 5 * np.median(deg)
+
+
+@pytest.mark.parametrize("name", list(DATASETS))
+def test_datasets_load(name):
+    g = load_dataset(name)
+    g.validate()
+    assert g.features.shape == (g.num_nodes, DATASETS[name][2])
+    assert g.labels.min() >= 0
+
+
+def test_edge_byte_range_contiguous():
+    g = rmat_graph(128, 1024, seed=5)
+    prev_end = 0
+    for u in range(g.num_nodes):
+        lo, hi = g.edge_byte_range(u)
+        assert lo == prev_end
+        prev_end = hi
+    assert prev_end == g.num_edges * 8
+
+
+@given(st.integers(8, 64), st.integers(0, 200), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_edges_to_csr_invariants(n, m, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    g = edges_to_csr(src, dst, n)
+    g.validate()
+    # symmetric: u in N(v) <=> v in N(u)
+    for u in range(min(n, 8)):
+        for v in g.neighbors(u):
+            assert u in g.neighbors(int(v))
+    # no self loops, no duplicates
+    for u in range(min(n, 8)):
+        nb = g.neighbors(u)
+        assert u not in nb
+        assert len(set(nb.tolist())) == len(nb)

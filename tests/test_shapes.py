@@ -1,0 +1,44 @@
+"""Shape-cell definitions + skip policy (deliverable f scaffolding)."""
+
+import jax
+import pytest
+
+from repro.launch.shapes import SHAPES, cell_skip_reason, input_specs
+from repro.models.registry import ARCH_IDS, get_config
+
+
+def test_shape_cells_match_assignment():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].kind == "decode"
+
+
+def test_long500k_skip_policy():
+    runs = {a for a in ARCH_IDS
+            if cell_skip_reason(get_config(a), SHAPES["long_500k"]) is None}
+    # sub-quadratic archs run; pure full-attention archs skip (DESIGN.md §4)
+    assert runs == {"gemma3-1b", "mamba2-370m", "mixtral-8x7b", "hymba-1.5b"}
+    for a in ARCH_IDS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_skip_reason(get_config(a), SHAPES[s]) is None
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_abstract(arch, host_mesh, rules):
+    """input_specs must be pure ShapeDtypeStructs (no allocation)."""
+    cfg = get_config(arch)
+    for sname in ("train_4k", "prefill_32k", "decode_32k"):
+        shape = SHAPES[sname]
+        specs = input_specs(cfg, shape, rules, host_mesh)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+        if shape.kind == "train":
+            assert specs["tokens" if not cfg.embeds_input else "embeds"] \
+                .shape[0] == shape.global_batch
+        if shape.kind == "decode":
+            assert specs["tokens"].shape == (shape.global_batch, 1)
+            assert "cache" in specs

@@ -1,0 +1,61 @@
+"""Logical-axis sharding resolution: divisibility fallback, axis reuse."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ShardingRules, logical_to_spec
+from repro.launch.mesh import make_mesh
+
+RULES = ShardingRules.default()
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_basic_resolution(mesh11):
+    spec = logical_to_spec(("batch", "seq"), RULES, mesh11)
+    assert spec == P(("data",),)  # 'pod' absent -> dropped; seq None trimmed
+
+
+def test_divisibility_fallback(mesh11):
+    # dim 3 not divisible by nothing on a 1-dev mesh -> still fine
+    spec = logical_to_spec(("heads", None), RULES, mesh11, (3, 7))
+    assert spec == P("model") or spec == P()  # 1-sized axis always divides
+
+
+def test_no_axis_reuse(mesh11):
+    # both logical dims map to 'model': second must fall back to None
+    spec = logical_to_spec(("heads", "mlp"), RULES, mesh11, (4, 4))
+    used = [s for s in spec if s is not None]
+    flat = []
+    for s in used:
+        flat.extend(s if isinstance(s, tuple) else (s,))
+    assert len(flat) == len(set(flat))
+
+
+def test_unknown_axis_raises(mesh11):
+    with pytest.raises(KeyError):
+        logical_to_spec(("nonexistent",), RULES, mesh11)
+
+
+@given(st.lists(st.sampled_from(
+    ["batch", "embed", "heads", "kv_heads", "mlp", "vocab", "seq", None]),
+    min_size=1, max_size=5),
+    st.integers(1, 4), st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_spec_property(axes, dpow, mpow):
+    """For any axis combo and any divisible/indivisible dims: no mesh axis
+    is used twice, and every sharded dim is divisible by its axis size."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    dims = tuple(2 ** (i % 4) * 3 for i in range(len(axes)))
+    spec = logical_to_spec(tuple(axes), RULES, mesh, dims)
+    flat = []
+    for s in spec:
+        if s is None:
+            continue
+        flat.extend(s if isinstance(s, tuple) else (s,))
+    assert len(flat) == len(set(flat))

@@ -1,0 +1,134 @@
+"""Storage simulator: cache semantics, engine invariants, paper-claim
+directionality (the quantitative table lives in benchmarks/EXPERIMENTS.md)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import load_dataset, sample_khop
+from repro.storage import (ENGINES, LRUCache, PinnedCache, block_trace,
+                           capacity_report, e2e_train, make_engine,
+                           throughput)
+
+
+def test_lru_semantics():
+    c = LRUCache(2)
+    assert not c.access(1)
+    assert not c.access(2)
+    assert c.access(1)          # hit
+    assert not c.access(3)      # evicts 2 (LRU)
+    assert not c.access(2)
+    assert c.access(3)
+
+
+def test_pinned_cache_prefers_hubs(small_graph):
+    g = small_graph
+    c = PinnedCache(g, capacity_blocks=64)
+    hub = int(np.argmax(g.degrees()))
+    lo, _ = g.edge_byte_range(hub)
+    assert c.access(lo // 4096), "hottest node's block must be pinned"
+
+
+@given(st.integers(0, 500), st.integers(1, 400))
+@settings(max_examples=30, deadline=None)
+def test_block_trace_invariants(seed, M):
+    g = load_dataset("reddit")
+    rng = np.random.default_rng(seed)
+    touched = rng.integers(0, g.num_nodes, M)
+    bt = block_trace(g, touched)
+    assert bt.n_requests == M
+    assert bt.total_blocks >= M
+    assert bt.unique_blocks <= bt.total_blocks
+    assert (bt.n_blocks >= 1).all()
+    # block count consistent with chunk size
+    assert (bt.n_blocks <= bt.chunk_bytes // 4096 + 2).all()
+
+
+@pytest.fixture(scope="module")
+def engines_and_trace(large_graph):
+    g = large_graph
+    rng = np.random.default_rng(0)
+    engines = {n: make_engine(n, g) for n in ENGINES}
+    for w in range(3):
+        t = sample_khop(g, rng.integers(0, g.num_nodes, 256), (10, 5), seed=w)
+        for n in ("mmap", "directio", "fpga"):
+            engines[n].batch_cost(t)
+    trace = sample_khop(g, rng.integers(0, g.num_nodes, 256), (10, 5),
+                        seed=42)
+    return engines, trace
+
+
+def test_engine_ordering(engines_and_trace):
+    """The paper's qualitative result: dram < isp < directio < mmap in
+    per-batch latency, and FPGA-CSD fails to beat SmartSAGE(SW)."""
+    engines, trace = engines_and_trace
+    t = {n: e.batch_cost(trace).time_s for n, e in engines.items()}
+    assert t["dram"] < t["isp_oracle"] <= t["isp"]
+    assert t["isp"] < t["directio"]
+    assert t["directio"] < t["mmap"]
+    assert t["fpga"] > t["directio"]          # Fig. 19
+    assert t["dram"] < t["pmem"] < t["mmap"]
+
+
+def test_transfer_amplification(engines_and_trace):
+    """ISP ships the dense subgraph; mmap ships raw blocks (Fig. 10)."""
+    engines, trace = engines_and_trace
+    mmap = engines["mmap"].batch_cost(trace)
+    isp = engines["isp"].batch_cost(trace)
+    assert mmap.link_bytes > 5 * isp.link_bytes
+    assert isp.commands == 1                  # NS_config coalescing
+    assert mmap.commands > 100
+
+
+def test_coalescing_granularity_monotone(large_graph, engines_and_trace):
+    """Fig. 15: shrinking the coalescing granularity only hurts."""
+    _, trace = engines_and_trace
+    times = []
+    for coal in (256, 64, 16, 4, 1):
+        e = make_engine("isp", large_graph, coalesce=coal)
+        times.append(e.batch_cost(trace).time_s)
+    assert all(a <= b * 1.001 for a, b in zip(times, times[1:])), times
+
+
+def test_multiworker_throughput_saturates(engines_and_trace):
+    """Fig. 17: host paths scale ~linearly; the ISP path saturates on
+    shared SSD resources, so its advantage declines with workers."""
+    engines, trace = engines_and_trace
+    isp = engines["isp"].batch_cost(trace)
+    sw = engines["directio"].batch_cost(trace)
+    r1 = throughput(isp, 1) / throughput(sw, 1)
+    r12 = throughput(isp, 12) / throughput(sw, 12)
+    assert r12 < r1, (r1, r12)
+    assert throughput(isp, 12) <= 12 / isp.time_s + 1e-9
+
+
+def test_e2e_idle_fraction(engines_and_trace):
+    engines, trace = engines_and_trace
+    dram = e2e_train(engines["dram"], trace, workers=12)
+    mmap = e2e_train(engines["mmap"], trace, workers=12)
+    assert 0.0 <= dram.gpu_idle_frac <= 0.05          # Fig. 7 left
+    # Fig. 7 right: mmap starves the consumer badly (paper: 60-95%; at
+    # this test's small batch the qualitative gap is what matters)
+    assert mmap.gpu_idle_frac > 0.3
+    assert mmap.gpu_idle_frac > dram.gpu_idle_frac + 0.3
+    assert dram.train_throughput > mmap.train_throughput
+
+
+def test_capacity_report():
+    rows = capacity_report()
+    by = {r["dataset"]: r for r in rows}
+    # the paper's premise: large-scale datasets exceed 192 GB DRAM but fit SSD
+    assert not by["reddit"]["fits_dram_192gb"]
+    assert not by["movielens"]["fits_dram_192gb"]
+    assert all(r["fits_ssd_2tb"] for r in rows)
+
+
+def test_saint_sampler_supported(large_graph):
+    """§VI-F: the ISP engine accommodates GraphSAINT traces too."""
+    from repro.core import saint_random_walk
+    rng = np.random.default_rng(0)
+    tr = saint_random_walk(large_graph, rng.integers(0, large_graph.num_nodes, 256),
+                           walk_length=4, seed=1)
+    isp = make_engine("isp", large_graph).batch_cost(tr)
+    mmap = make_engine("mmap", large_graph).batch_cost(tr)
+    assert isp.time_s < mmap.time_s
