@@ -1,0 +1,96 @@
+"""Backend throughput benchmark: steps/s + consumer-idle fraction for each
+data-preparation backend (host / isp / pallas) feeding the same GraphSAGE
+consumer — the live-training version of the paper's backend comparison.
+
+Run:  PYTHONPATH=src python benchmarks/bench_backends.py
+Emits BENCH_backends.json (the perf-trajectory seed) and prints one line
+per backend.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="reddit")
+    ap.add_argument("--backends", default="host,isp,pallas")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--fanouts", default="10,5")
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--out", default="BENCH_backends.json")
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (GNNConfig, GraphSAGE, build_train_step,
+                            load_dataset, make_loader, train_loop)
+    from repro.distributed.sharding import ShardingRules
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import adamw
+
+    fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    g = load_dataset(args.dataset)
+    mesh = make_host_mesh()
+    rules = ShardingRules.default()
+    gnn = GraphSAGE(GNNConfig(feat_dim=g.feat_dim, hidden=args.hidden,
+                              n_classes=int(g.labels.max()) + 1,
+                              fanouts=fanouts))
+    opt = adamw(1e-3)
+
+    results = {}
+    for backend in args.backends.split(","):
+        loader = make_loader(backend, g, batch_size=args.batch,
+                             fanouts=fanouts, mesh=mesh)
+        try:
+            step = build_train_step(loader, gnn, opt, mesh, rules)
+            p = gnn.init(jax.random.key(0))
+            state = {"params": p, "opt": opt.init(p),
+                     "step": jnp.zeros((), jnp.int32)}
+            with mesh:
+                # warmup covers jit compilation + pipeline fill
+                state, _ = train_loop(loader, step, state,
+                                      steps=args.warmup)
+                state, stats = train_loop(loader, step, state,
+                                          steps=args.warmup + args.steps,
+                                          start=args.warmup)
+        finally:
+            loader.close()
+        results[backend] = {
+            "steps_per_s": stats.steps_per_s,
+            "idle_fraction": stats.idle_fraction,
+            "idle_s": stats.idle_s,
+            "busy_s": stats.busy_s,
+            "loader_stats": loader.stats(),
+        }
+        print(f"bench_backends,{args.dataset},{backend},"
+              f"steps_per_s,{stats.steps_per_s:.4g}")
+        print(f"bench_backends,{args.dataset},{backend},"
+              f"idle_fraction,{stats.idle_fraction:.4g}")
+
+    payload = {
+        "bench": "backends",
+        "dataset": args.dataset,
+        "steps": args.steps,
+        "batch": args.batch,
+        "fanouts": list(fanouts),
+        "hidden": args.hidden,
+        "backend_default": jax.default_backend(),
+        "platform": platform.platform(),
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,28 +1,29 @@
 """Quickstart: SmartSAGE-on-TPU in ~60 lines.
 
-Builds a Kronecker-expanded power-law graph, partitions it over a 4-shard
-mesh, and trains GraphSAGE with *near-data* (ISP-style) subgraph
-generation: each shard samples the targets it owns and only the dense
-subgraph + features cross the mesh (the paper's key data movement,
-DESIGN.md §2).
+Builds a Kronecker-expanded power-law graph and trains GraphSAGE through
+the unified minibatch data plane: pick a data-preparation backend
+(``host`` numpy pipeline, ``isp`` near-data mesh sampling, or ``pallas``
+in-storage-style kernels) and every one feeds the same consumer with the
+same ``Minibatch`` contract (the paper's backend comparison, live).
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [backend]
 """
 
 import os
+import sys
 os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
     " --xla_force_host_platform_device_count=4"
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import (GNNConfig, GraphSAGE, ISPGraph,
-                        build_isp_train_step, load_dataset, partition_graph)
+from repro.core import (GNNConfig, GraphSAGE, build_train_step, load_dataset,
+                        make_loader, train_loop)
 from repro.distributed.sharding import ShardingRules
 from repro.launch.mesh import make_mesh
 from repro.optim import adamw
 
+BACKEND = sys.argv[1] if len(sys.argv) > 1 else "isp"
 FANOUTS = (10, 5)
 BATCH = 64
 STEPS = 30
@@ -32,32 +33,38 @@ graph = load_dataset("reddit", large_scale=False)
 print(f"graph: {graph.num_nodes} nodes, {graph.num_edges} edges, "
       f"{graph.feat_dim}-d features")
 
-# 2. Mesh + contiguous node-range partitions (the 'data' axis is where the
-#    cold graph lives — the TPU analogue of the SSD).
+# 2. Mesh + the chosen data-preparation backend.  For `isp` the cold graph
+#    lives sharded over the 'data' axis — the TPU analogue of the SSD; the
+#    other backends run single-device data preparation.
 mesh = make_mesh((4, 1), ("data", "model"))
-engine = ISPGraph(partition_graph(graph, 4), mesh)
+loader = make_loader(BACKEND, graph, batch_size=BATCH, fanouts=FANOUTS,
+                     mesh=mesh)
+print(f"backend: {BACKEND}")
 
-# 3. GraphSAGE backend + fused near-data train step (one jit region:
-#    sample -> gather -> convolve -> AdamW update).
+# 3. The shared GraphSAGE consumer: one jitted update step over whatever
+#    Minibatch the backend produced (sample -> gather -> convolve -> AdamW).
 gnn = GraphSAGE(GNNConfig(feat_dim=graph.feat_dim, hidden=128,
                           n_classes=int(graph.labels.max()) + 1,
                           fanouts=FANOUTS))
 opt = adamw(1e-3)
 rules = ShardingRules.default()
-step = jax.jit(build_isp_train_step(engine, gnn, opt, mesh, rules, FANOUTS),
-               donate_argnums=0)
+step = build_train_step(loader, gnn, opt, mesh, rules)
 
-state = {"params": gnn.init(jax.random.key(0)), "opt": None,
+params = gnn.init(jax.random.key(0))
+state = {"params": params, "opt": opt.init(params),
          "step": jnp.zeros((), jnp.int32)}
-state["opt"] = opt.init(state["params"])
+
+
+def log(i, state, m):
+    if (i + 1) % 10 == 0:
+        print(f"step {i+1:3d}  loss={float(m['loss']):.4f}  "
+              f"acc={float(m['acc']):.3f}")
+
 
 with mesh:
-    for i in range(STEPS):
-        targets = jnp.asarray(np.random.default_rng(i).integers(
-            0, graph.num_nodes, BATCH), jnp.int32)
-        state, m = step(state, targets, jax.random.key(i))
-        if (i + 1) % 10 == 0:
-            print(f"step {i+1:3d}  loss={float(m['loss']):.4f}  "
-                  f"acc={float(m['acc']):.3f}")
+    state, stats = train_loop(loader, step, state, steps=STEPS, on_step=log)
+loader.close()
 
+print(f"{stats.steps_per_s:.2f} steps/s, consumer idle "
+      f"{stats.idle_fraction:.1%}")
 print("done — see examples/isp_vs_mmap.py for the storage-tier story")

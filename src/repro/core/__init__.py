@@ -6,13 +6,19 @@ gnn        — GraphSAGE aggregate/convolve backend (dense fixed-fanout)
 partition  — contiguous node-range partitioning for the mesh
 isp        — near-data sharded sampling/gather (the ISP architecture)
 pipeline   — producer-consumer loop w/ straggler mitigation (Fig. 4/7)
+loader     — the unified minibatch data plane: one SubgraphLoader
+             interface over the host / isp / pallas backends
 """
 
 from repro.core.graph import (CSRGraph, DATASETS, attach_features,
                               edges_to_csr, kronecker_expand, load_dataset,
                               rmat_graph)
 from repro.core.gnn import GNNConfig, GraphSAGE, gnn_loss_fn
-from repro.core.isp import ISPGraph, build_isp_train_step
+from repro.core.isp import (ISPGraph, build_fused_train_step,
+                            build_isp_train_step)
+from repro.core.loader import (LOADERS, Minibatch, RunStats, SubgraphLoader,
+                               batch_targets, build_train_step, make_loader,
+                               register_loader, train_loop)
 from repro.core.partition import PartitionedGraph, partition_graph
 from repro.core.pipeline import (PipelineStats, ProducerConsumerPipeline,
                                  make_host_producer)

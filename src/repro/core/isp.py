@@ -29,6 +29,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.partition import PartitionedGraph
+from repro.distributed.compat import shard_map
 from repro.core.sampler import DEFAULT_FANOUTS
 
 
@@ -89,7 +90,7 @@ class ISPGraph:
             mine = self._local_sample(indptr, indices, offset, frontier, rand)
             return lax.psum(mine, ax)
 
-        return jax.shard_map(
+        return shard_map(
             local, mesh=self.mesh,
             in_specs=(P(ax, None), P(ax, None), P(ax), P(), P()),
             out_specs=P(), check_vma=False,
@@ -112,7 +113,7 @@ class ISPGraph:
         def local(feats, offset, ids):
             return lax.psum(self._local_gather(feats, offset, ids), ax)
 
-        return jax.shard_map(
+        return shard_map(
             local, mesh=self.mesh,
             in_specs=(P(ax, None, None), P(ax), P()),
             out_specs=P(), check_vma=False,
@@ -128,7 +129,7 @@ class ISPGraph:
             vals = jnp.take(labels[0], li)
             return lax.psum(jnp.where(owned, vals, 0), ax)
 
-        return jax.shard_map(
+        return shard_map(
             local, mesh=self.mesh,
             in_specs=(P(ax, None), P(ax), P()),
             out_specs=P(), check_vma=False,
@@ -168,19 +169,23 @@ class ISPGraph:
             valid = (k < deg[:, None]) & owned[:, None]
             return lax.psum(jnp.where(valid, rows, 0), ax)
 
-        return jax.shard_map(
+        return shard_map(
             local, mesh=self.mesh,
             in_specs=(P(ax, None), P(ax, None), P(ax), P()),
             out_specs=P(), check_vma=False,
         )(self.indptr, self.indices, self.node_offset, targets)
 
 
-def build_isp_train_step(engine: ISPGraph, gnn, optimizer, mesh, rules,
-                         fanouts=DEFAULT_FANOUTS):
-    """Fused end-to-end step: near-data sample + gather + GraphSAGE update.
+def build_fused_train_step(prepare_fn, gnn, optimizer, mesh, rules):
+    """Fused end-to-end step: data preparation + GraphSAGE update in ONE
+    jit region, so XLA overlaps the subgraph exchange with the dense
+    convolve compute where the schedule allows.  state is donated.
 
-    One jit region: XLA overlaps the psum-based subgraph exchange with the
-    dense convolve compute where the schedule allows.  state is donated.
+    ``prepare_fn(targets, key) -> (hop_feats, labels)`` must be traceable
+    (the ISP mesh path and the Pallas kernel path both qualify).  The
+    loader-driven generic consumer is ``core.loader.build_train_step``;
+    this is the latency-optimized variant for backends whose preparation
+    stage is itself jittable.
     """
     from repro.core.gnn import gnn_loss_fn
 
@@ -190,8 +195,7 @@ def build_isp_train_step(engine: ISPGraph, gnn, optimizer, mesh, rules,
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def step(state, targets, key):
-        hop_feats, labels = engine.sample_and_gather(targets, fanouts,
-                                                     key=key)
+        hop_feats, labels = prepare_fn(targets, key)
         (_, metrics), grads = grad_fn(state["params"], hop_feats, labels)
         new_params, new_opt, opt_metrics = optimizer.update(
             grads, state["opt"], state["params"], state["step"])
@@ -199,3 +203,12 @@ def build_isp_train_step(engine: ISPGraph, gnn, optimizer, mesh, rules,
                  "step": state["step"] + 1}, dict(metrics, **opt_metrics))
 
     return step
+
+
+def build_isp_train_step(engine: ISPGraph, gnn, optimizer, mesh, rules,
+                         fanouts=DEFAULT_FANOUTS):
+    """Fused near-data step: ``sample_and_gather`` + update in one jit."""
+    return build_fused_train_step(
+        lambda targets, key: engine.sample_and_gather(targets, fanouts,
+                                                      key=key),
+        gnn, optimizer, mesh, rules)

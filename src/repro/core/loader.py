@@ -1,0 +1,400 @@
+"""Unified minibatch data plane: one ``SubgraphLoader`` interface over the
+host, ISP-mesh, and Pallas data-preparation backends.
+
+The paper's argument is a comparison of *data-preparation backends* feeding
+the same GraphSAGE consumer (in-memory vs. mmap-SSD vs. ISP).  This module
+is that seam: every backend produces the same ``Minibatch`` (per-hop IDs,
+per-hop features, labels, optional storage ``SampleTrace``), so the trainer,
+benchmarks, and storage simulator compose with any of them.
+
+Backends (``make_loader(name, ...)``):
+
+* ``host``   — numpy ``sample_khop`` + feature indexing on the host graph,
+  wrapped in the ``ProducerConsumerPipeline`` for async production (the
+  paper's CPU data-preparation stage, Fig. 4).
+* ``isp``    — the ``ISPGraph`` shard_map path: each mesh shard samples the
+  targets it owns and only the dense subgraph crosses the links (the ISP
+  architecture).
+* ``pallas`` — composes the ``kernels/neighbor_sample`` k-hop with the
+  ``kernels/feature_gather`` row gather: the single-device in-storage-style
+  kernel path (HBM as flash, VMEM as the SSD page buffer).
+
+A simulated storage tier (``storage/engines.py``) can be attached to any
+loader: each batch's access trace is replayed against the engine's cost
+model and the resulting latency is imposed on production
+(``produce_delay_s`` of the pipeline), connecting the performance simulator
+to live training.
+
+Randomness contract: targets for batch ``i`` come from
+``np.random.default_rng(seed + i)``; device backends draw sampling
+randomness from ``jax.random.fold_in(jax.random.key(seed), i)`` with one
+further per-hop fold — identical between the ``isp`` and ``pallas``
+backends, so their sampled IDs match exactly.  The host backend uses the
+numpy reference sampler (same distribution, different stream), so only
+shapes are guaranteed to match it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+import time
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.core.sampler import DEFAULT_FANOUTS, SampleTrace, sample_khop
+
+
+@dataclasses.dataclass
+class Minibatch:
+    """One training minibatch, backend-agnostic.
+
+    targets:   (M,) int32 — the batch's seed nodes.
+    hop_ids:   hop_ids[t] has shape (M, f1, ..., ft) — sampled node IDs.
+    hop_feats: hop_feats[t] has shape (M, f1, ..., ft, F) — their features.
+    labels:    (M,) int32.
+    trace:     the storage access trace (host backend only; the unit the
+               storage simulator replays).
+    """
+
+    targets: object
+    hop_ids: list
+    hop_feats: list
+    labels: object
+    trace: SampleTrace | None = None
+
+    @property
+    def batch_size(self) -> int:
+        return int(np.asarray(self.targets).shape[0])
+
+    @property
+    def depth(self) -> int:
+        return len(self.hop_ids) - 1
+
+
+@runtime_checkable
+class SubgraphLoader(Protocol):
+    """The data-preparation stage: batch index -> Minibatch."""
+
+    backend: str
+    fanouts: tuple[int, ...]
+
+    def get_batch(self, idx: int) -> Minibatch: ...
+
+    def stats(self) -> dict: ...
+
+    def close(self) -> None: ...
+
+
+LOADERS: dict[str, type] = {}
+
+
+def register_loader(name: str):
+    def deco(cls):
+        cls.backend = name
+        LOADERS[name] = cls
+        return cls
+    return deco
+
+
+def make_loader(name: str, g: CSRGraph, *, batch_size: int = 64,
+                fanouts: Sequence[int] = DEFAULT_FANOUTS, mesh=None,
+                seed: int = 0, storage_engine=None, **kw) -> "SubgraphLoader":
+    """Build a registered backend loader over ``g``."""
+    if name not in LOADERS:
+        raise KeyError(f"unknown backend {name!r}; have {sorted(LOADERS)}")
+    return LOADERS[name](g, batch_size=batch_size, fanouts=tuple(fanouts),
+                         mesh=mesh, seed=seed, storage_engine=storage_engine,
+                         **kw)
+
+
+def batch_targets(g: CSRGraph, idx: int, batch_size: int,
+                  seed: int = 0) -> np.ndarray:
+    """The shared per-batch target stream (pure function of the index)."""
+    rng = np.random.default_rng(seed + idx)
+    return rng.integers(0, g.num_nodes, batch_size).astype(np.int32)
+
+
+class _LoaderBase:
+    """Shared target generation + simulated-storage accounting."""
+
+    backend = "base"
+
+    def __init__(self, g: CSRGraph, *, batch_size: int, fanouts,
+                 seed: int = 0, storage_engine=None):
+        self.g = g
+        self.batch_size = batch_size
+        self.fanouts = tuple(fanouts)
+        self.seed = seed
+        self.storage_engine = storage_engine
+        self.simulated_storage_s = 0.0
+        self._storage_lock = threading.Lock()
+
+    def targets(self, idx: int) -> np.ndarray:
+        return batch_targets(self.g, idx, self.batch_size, self.seed)
+
+    def storage_delay(self, trace: SampleTrace) -> float:
+        """Replay ``trace`` against the attached engine's cost model and
+        return the simulated data-preparation latency (0 if no engine).
+        Called from producer threads, so the accounting is locked; a
+        straggler-reissued batch pays (and records) its cost twice, like
+        the duplicated work it models."""
+        if self.storage_engine is None or trace is None:
+            return 0.0
+        eng = self.storage_engine
+        delay = eng.batch_cost(trace).time_s + eng.feature_time(trace)
+        with self._storage_lock:
+            self.simulated_storage_s += delay
+        return delay
+
+    def impose_storage_cost(self, idx: int) -> None:
+        """Device backends have no host trace; re-sample one purely for the
+        cost model (same algorithmic event counts, host RNG stream) and
+        impose the simulated latency.  The numpy re-sample runs on the
+        consumer thread, so its real cost is deducted from the sleep — the
+        consumer-visible delay stays equal to the *modeled* latency and the
+        backend comparison is not skewed by cost-model overhead."""
+        if self.storage_engine is None:
+            return
+        t0 = time.perf_counter()
+        delay = self.storage_delay(
+            sample_khop(self.g, self.targets(idx), self.fanouts,
+                        seed=self.seed + idx))
+        time.sleep(max(0.0, delay - (time.perf_counter() - t0)))
+
+    def stats(self) -> dict:
+        return {"backend": self.backend,
+                "simulated_storage_s": self.simulated_storage_s}
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# host backend — numpy sampler + async producer pipeline
+# ---------------------------------------------------------------------------
+
+@register_loader("host")
+class HostSubgraphLoader(_LoaderBase):
+    """CPU data preparation (paper Fig. 4): ``sample_khop`` + feature
+    indexing in producer threads, consumed strictly in batch order.  The
+    storage engine's per-trace cost is imposed inside ``produce`` so the
+    pipeline's idle-fraction metric reflects the simulated tier."""
+
+    def __init__(self, g, *, batch_size, fanouts, mesh=None, seed=0,
+                 storage_engine=None, n_workers: int = 4,
+                 queue_depth: int = 8, straggler_factor: float = 4.0):
+        super().__init__(g, batch_size=batch_size, fanouts=fanouts,
+                         seed=seed, storage_engine=storage_engine)
+        from repro.core.pipeline import (ProducerConsumerPipeline,
+                                         make_host_producer)
+        produce = make_host_producer(g, batch_size, self.fanouts, seed=seed,
+                                     storage_cost_fn=self.storage_delay)
+        self.pipeline = ProducerConsumerPipeline(
+            produce, n_workers=n_workers, queue_depth=queue_depth,
+            straggler_factor=straggler_factor)
+
+    def get_batch(self, idx: int) -> Minibatch:
+        return self.pipeline.get_batch(idx)
+
+    def stats(self) -> dict:
+        s = self.pipeline.stats
+        produce = s.produce_times
+        return dict(super().stats(),
+                    mean_produce_s=float(np.mean(produce)) if produce else 0.0,
+                    reissued=s.reissued,
+                    duplicates_dropped=s.duplicates_dropped)
+
+    def close(self) -> None:
+        self.pipeline.close()
+
+
+# ---------------------------------------------------------------------------
+# isp backend — near-data sampling on the mesh
+# ---------------------------------------------------------------------------
+
+@register_loader("isp")
+class ISPSubgraphLoader(_LoaderBase):
+    """Near-data (ISP) data preparation: the partitioned graph lives sharded
+    on the mesh; sampling + gathering run where the shard lives and only the
+    dense subgraph crosses the links."""
+
+    def __init__(self, g, *, batch_size, fanouts, mesh=None, seed=0,
+                 storage_engine=None, axis: str = "data"):
+        super().__init__(g, batch_size=batch_size, fanouts=fanouts,
+                         seed=seed, storage_engine=storage_engine)
+        import jax
+        import jax.numpy as jnp
+        from repro.core.isp import ISPGraph
+        from repro.core.partition import partition_graph
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        self.mesh = mesh
+        self.engine = ISPGraph(partition_graph(g, mesh.shape[axis]), mesh,
+                               axis=axis)
+        self._key = jax.random.key(seed)
+        fanouts_ = self.fanouts
+        eng = self.engine
+
+        def prepare(targets, key):
+            hops = eng.sample_khop(targets, fanouts_, key=key)
+            hop_feats = [eng.gather_features(h) for h in hops]
+            labels = eng.gather_labels(hops[0])
+            return hops, hop_feats, labels
+
+        self._prepare = jax.jit(prepare)
+        self._jnp = jnp
+        self._jax = jax
+
+    def get_batch(self, idx: int) -> Minibatch:
+        targets = self.targets(idx)
+        self.impose_storage_cost(idx)
+        key = self._jax.random.fold_in(self._key, idx)
+        with self.mesh:
+            hops, hop_feats, labels = self._prepare(
+                self._jnp.asarray(targets), key)
+        return Minibatch(targets=targets, hop_ids=list(hops),
+                         hop_feats=list(hop_feats), labels=labels)
+
+
+# ---------------------------------------------------------------------------
+# pallas backend — in-storage-style kernels on one device
+# ---------------------------------------------------------------------------
+
+@register_loader("pallas")
+class PallasSubgraphLoader(_LoaderBase):
+    """Kernel data preparation: the ``neighbor_sample`` Pallas kernel run
+    k-hop (HBM edge array, VMEM block staging) composed with the
+    ``feature_gather`` row-gather kernel — the paper's ISP firmware loop on
+    the TPU memory hierarchy, feeding real training."""
+
+    def __init__(self, g, *, batch_size, fanouts, mesh=None, seed=0,
+                 storage_engine=None):
+        super().__init__(g, batch_size=batch_size, fanouts=fanouts,
+                         seed=seed, storage_engine=storage_engine)
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels import ops
+        self.indptr = jnp.asarray(g.indptr, jnp.int32)
+        self.indices = jnp.asarray(g.indices, jnp.int32)
+        self.features = jnp.asarray(g.features, jnp.float32)
+        self.max_degree = int(g.degrees().max()) if g.num_edges else 1
+        self._key = jax.random.key(seed)
+        self._ops = ops
+        self._jnp = jnp
+        self._jax = jax
+        fanouts_ = self.fanouts
+        maxd = self.max_degree
+
+        @jax.jit
+        def prepare(indptr, indices, features, targets, key):
+            hops = ops.sample_khop_kernel(indptr, indices, targets, fanouts_,
+                                          key=key, max_degree=maxd)
+            hop_feats = [ops.feature_gather_rows(features, h) for h in hops]
+            return hops, hop_feats
+
+        self._prepare = prepare
+
+    def get_batch(self, idx: int) -> Minibatch:
+        targets = self.targets(idx)
+        self.impose_storage_cost(idx)
+        key = self._jax.random.fold_in(self._key, idx)
+        hops, hop_feats = self._prepare(self.indptr, self.indices,
+                                        self.features,
+                                        self._jnp.asarray(targets), key)
+        labels = self.g.labels[targets]
+        return Minibatch(targets=targets, hop_ids=list(hops),
+                         hop_feats=list(hop_feats), labels=labels)
+
+
+# ---------------------------------------------------------------------------
+# generic consumer — one train step / training loop for every backend
+# ---------------------------------------------------------------------------
+
+def build_train_step(loader, gnn, optimizer, mesh=None, rules=None):
+    """Generic GraphSAGE update over any backend's ``Minibatch``.
+
+    The jit region covers loss + grads + optimizer (state donated); data
+    preparation happens in the loader, so the same consumer serves host
+    numpy batches and device-resident isp/pallas batches.  (The fused
+    sample-inside-jit ISP step remains available as
+    ``core.isp.build_isp_train_step``.)
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.gnn import gnn_loss_fn
+
+    if loader is not None and tuple(loader.fanouts) != tuple(gnn.cfg.fanouts):
+        raise ValueError(f"loader fanouts {loader.fanouts} != "
+                         f"gnn fanouts {gnn.cfg.fanouts}")
+
+    def loss_fn(params, hop_feats, labels):
+        return gnn_loss_fn(gnn, params, hop_feats, labels, mesh, rules)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @functools.partial(jax.jit, donate_argnums=0)
+    def step(state, hop_feats, labels):
+        (_, metrics), grads = grad_fn(state["params"], hop_feats, labels)
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, state["opt"], state["params"], state["step"])
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, dict(metrics, **opt_metrics))
+
+    def train_step(state, mb: Minibatch):
+        hop_feats = [jnp.asarray(f, jnp.float32) for f in mb.hop_feats]
+        return step(state, hop_feats, jnp.asarray(mb.labels, jnp.int32))
+
+    return train_step
+
+
+@dataclasses.dataclass
+class RunStats:
+    """Shared loop telemetry: the paper's Fig. 7 metrics for any backend."""
+
+    steps: int = 0
+    idle_s: float = 0.0          # consumer waiting on data preparation
+    busy_s: float = 0.0          # consumer in the train step
+    wall_s: float = 0.0
+
+    @property
+    def idle_fraction(self) -> float:
+        total = self.idle_s + self.busy_s
+        return self.idle_s / total if total > 0 else 0.0
+
+    @property
+    def steps_per_s(self) -> float:
+        return self.steps / self.wall_s if self.wall_s > 0 else 0.0
+
+
+def train_loop(loader, train_step, state, *, steps: int, start: int = 0,
+               on_step=None) -> tuple[object, RunStats]:
+    """Drive ``train_step`` over ``loader`` batches; record idle/busy split.
+
+    ``on_step(i, state, metrics)`` is called after every step (logging,
+    checkpointing).  Returns the final state and the run telemetry.
+    """
+    import jax
+
+    stats = RunStats()
+    t_start = time.perf_counter()
+    for i in range(start, steps):
+        t0 = time.perf_counter()
+        mb = loader.get_batch(i)
+        t1 = time.perf_counter()
+        state, metrics = train_step(state, mb)
+        # async dispatch would otherwise push device compute into the next
+        # step's idle window and skew the idle/busy split
+        jax.block_until_ready(metrics)
+        t2 = time.perf_counter()
+        stats.idle_s += t1 - t0
+        stats.busy_s += t2 - t1
+        stats.steps += 1
+        if on_step is not None:
+            on_step(i, state, metrics)
+    stats.wall_s = time.perf_counter() - t_start
+    return state, stats

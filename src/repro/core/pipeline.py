@@ -26,6 +26,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.graph import CSRGraph
+from repro.core.loader import Minibatch, batch_targets
 from repro.core.sampler import DEFAULT_FANOUTS, sample_khop
 
 
@@ -44,18 +45,26 @@ class PipelineStats:
         return self.consumer_idle_s / total if total > 0 else 0.0
 
 
-def make_host_producer(g: CSRGraph, batch_size: int,
-                       fanouts=DEFAULT_FANOUTS) -> Callable[[int], dict]:
-    """Returns produce(batch_idx) -> minibatch dict of numpy arrays."""
+def make_host_producer(g: CSRGraph, batch_size: int, fanouts=DEFAULT_FANOUTS,
+                       *, seed: int = 0,
+                       storage_cost_fn=None) -> Callable[[int], Minibatch]:
+    """Returns produce(batch_idx) -> ``Minibatch`` of numpy arrays.
 
-    def produce(batch_idx: int) -> dict:
-        rng = np.random.default_rng(batch_idx)
-        targets = rng.integers(0, g.num_nodes, batch_size).astype(np.int32)
-        trace = sample_khop(g, targets, fanouts, seed=batch_idx)
+    ``storage_cost_fn(trace) -> seconds`` (optional) models the storage
+    tier serving the batch's access trace; the producer sleeps that long,
+    so a slow simulated device shows up as consumer idle time exactly like
+    the paper's Fig. 7 mismatch.
+    """
+
+    def produce(batch_idx: int) -> Minibatch:
+        targets = batch_targets(g, batch_idx, batch_size, seed)
+        trace = sample_khop(g, targets, fanouts, seed=seed + batch_idx)
+        if storage_cost_fn is not None:
+            time.sleep(storage_cost_fn(trace))
         hop_feats = [g.features[h] for h in trace.hops]
         labels = g.labels[targets]
-        return {"hop_feats": hop_feats, "labels": labels,
-                "targets": targets}
+        return Minibatch(targets=targets, hop_ids=list(trace.hops),
+                         hop_feats=hop_feats, labels=labels, trace=trace)
 
     return produce
 
@@ -65,7 +74,7 @@ class ProducerConsumerPipeline:
     consumer.  ``produce_fn(batch_idx) -> batch``; consumption order is
     strictly by batch index (training determinism is per-batch-seed)."""
 
-    def __init__(self, produce_fn: Callable[[int], dict], *,
+    def __init__(self, produce_fn: Callable[[int], object], *,
                  n_workers: int = 4, queue_depth: int = 8,
                  straggler_factor: float = 4.0,
                  produce_delay_s: float = 0.0):
@@ -75,7 +84,7 @@ class ProducerConsumerPipeline:
         self.produce_delay_s = produce_delay_s   # simulated slow storage tier
         self.stats = PipelineStats()
         self._tasks: queue.Queue = queue.Queue()
-        self._results: dict[int, dict] = {}
+        self._results: dict[int, object] = {}
         self._results_lock = threading.Condition()
         self._issued: dict[int, float] = {}
         self._stop = threading.Event()
@@ -108,6 +117,12 @@ class ProducerConsumerPipeline:
                 self._results_lock.notify_all()
 
     def _ensure_issued(self, upto: int):
+        # Consumption is strictly by increasing index, so the first request
+        # defines the start of the stream: fast-forward past lower indices
+        # instead of producing them (checkpoint resume at step N must not
+        # force production of batches 0..N-1).
+        if self._next_issue == 0 and upto > 0:
+            self._next_issue = upto
         while self._next_issue <= upto + self._queue_depth - 1:
             self._tasks.put(self._next_issue)
             self._issued[self._next_issue] = time.perf_counter()
@@ -125,7 +140,7 @@ class ProducerConsumerPipeline:
             self.stats.reissued += 1
 
     # -- consumer side -------------------------------------------------------
-    def get_batch(self, idx: int, timeout: float = 30.0) -> dict:
+    def get_batch(self, idx: int, timeout: float = 30.0):
         self._ensure_issued(idx)
         t0 = time.perf_counter()
         with self._results_lock:
@@ -138,7 +153,7 @@ class ProducerConsumerPipeline:
         self.stats.consumer_idle_s += time.perf_counter() - t0
         return batch
 
-    def run(self, consume_fn: Callable[[dict], None], n_batches: int):
+    def run(self, consume_fn: Callable[[object], None], n_batches: int):
         """Drive the full loop; consume_fn is the device step."""
         for i in range(n_batches):
             batch = self.get_batch(i)

@@ -73,11 +73,14 @@ def sample_khop(g: CSRGraph, targets: np.ndarray,
     hops = [targets]
     touched = [targets.reshape(-1)]
     frontier = targets
-    for f in fanouts:
+    for i, f in enumerate(fanouts):
         nxt = _sample_one_hop(g, frontier, f, rng)
         hops.append(nxt)
         frontier = nxt
-        if f != fanouts[-1]:
+        # every hop except the last is expanded again, so its neighbor
+        # lists are read; compare by position — repeated fanouts like
+        # (10, 10) must not drop records
+        if i != len(fanouts) - 1:
             touched.append(nxt.reshape(-1))
     touched_nodes = np.concatenate(touched)
     subgraph = np.unique(np.concatenate([h.reshape(-1) for h in hops]))

@@ -1,0 +1,43 @@
+"""Version compatibility for the jax API surface this codebase targets.
+
+The code is written against the current jax API (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``).  Older jax releases
+(0.4.x) expose the same functionality as ``jax.experimental.shard_map``
+with ``check_rep`` and a ``make_mesh`` without ``axis_types``.  Every
+call site imports through this module so the rest of the codebase can be
+written once, in the modern spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the old ``check_rep`` spelling as fallback."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    shape, axes = tuple(shape), tuple(axes)
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except ImportError:
+        pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    # pre-0.4.35: build the Mesh directly from the device list
+    import math
+
+    import numpy as np
+    from jax.sharding import Mesh
+    n = math.prod(shape)
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)

@@ -52,6 +52,39 @@ def neighbor_sample(indptr, indices, targets, rand, *, max_degree: int):
                       block_e=block_e, interpret=_interpret())
 
 
+def sample_khop_kernel(indptr, indices, targets, fanouts, *, key,
+                       max_degree: int):
+    """K-hop GraphSAGE sampling via the ``neighbor_sample`` kernel.
+
+    Per hop: fold the hop index into ``key``, draw rand bits shaped like
+    the frontier + fanout, flatten the frontier, and run the kernel.  The
+    key/rand derivation matches ``ISPGraph.sample_khop`` bit-for-bit, so
+    the pallas and isp backends sample identical node IDs for the same
+    per-batch key.  Returns the per-hop ID tensors
+    [(M,), (M, f1), (M, f1, f2), ...].
+    """
+    hops = [targets.astype(jnp.int32)]
+    frontier = hops[0]
+    for i, f in enumerate(fanouts):
+        rand = jax.random.randint(jax.random.fold_in(key, i),
+                                  frontier.shape + (f,), 0, 2**31 - 1)
+        flat = frontier.reshape(-1)
+        nxt = neighbor_sample(indptr, indices, flat,
+                              rand.reshape(flat.shape[0], f),
+                              max_degree=max_degree)
+        frontier = nxt.reshape(frontier.shape + (f,))
+        hops.append(frontier)
+    return hops
+
+
+def feature_gather_rows(table, ids):
+    """(N, F), ids (...,) int32 -> (..., F) row gather via the Pallas
+    gather kernel (fanout dim = 1, so the mean is the row itself)."""
+    F = table.shape[1]
+    out = feature_gather_mean(table, ids.reshape(-1, 1).astype(jnp.int32))
+    return out.reshape(ids.shape + (F,)).astype(table.dtype)
+
+
 def decode_attention(q, k, v, valid_len, window=0, *, block_s: int = 512):
     """Flash-decode over a KV cache; pads S up to a block multiple."""
     if not _ENABLED:

@@ -14,8 +14,7 @@ first jax import and only then builds the mesh.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.distributed.compat import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -28,13 +27,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Generic mesh helper used by tests/examples (small CPU meshes)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_host_mesh():

@@ -28,6 +28,13 @@ import time
 def _parse():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="graphsage")
+    ap.add_argument("--backend", default="isp",
+                    choices=("host", "isp", "pallas"),
+                    help="GNN data-preparation backend (SubgraphLoader)")
+    ap.add_argument("--storage-engine", default="none",
+                    choices=("none", "dram", "pmem", "mmap", "directio",
+                             "isp", "isp_oracle", "fpga"),
+                    help="simulated storage tier attached to the loader")
     ap.add_argument("--dataset", default="reddit")
     ap.add_argument("--large-scale", action="store_true")
     ap.add_argument("--steps", type=int, default=50)
@@ -77,32 +84,31 @@ def main():
 def run_gnn(args, mesh):
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro import checkpoint as ckpt
-    from repro.core import (GNNConfig, GraphSAGE, ISPGraph,
-                            build_isp_train_step, load_dataset,
-                            partition_graph)
+    from repro.core import (GNNConfig, GraphSAGE, build_train_step,
+                            load_dataset, make_loader, train_loop)
     from repro.distributed.sharding import ShardingRules
     from repro.optim import adamw
 
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     g = load_dataset(args.dataset, large_scale=args.large_scale)
-    n_shards = mesh.shape["data"]
-    pg = partition_graph(g, n_shards)
-    engine = ISPGraph(pg, mesh)
+    engine = None
+    if args.storage_engine and args.storage_engine != "none":
+        from repro.storage import make_engine
+        engine = make_engine(args.storage_engine, g)
+    loader = make_loader(args.backend, g, batch_size=args.batch,
+                         fanouts=fanouts, mesh=mesh, storage_engine=engine)
     print(f"[train] {g.name}: {g.num_nodes} nodes {g.num_edges} edges, "
-          f"{n_shards} graph shards (edge imbalance "
-          f"{pg.edge_imbalance():.2f})")
+          f"backend={args.backend}"
+          + (f", storage={args.storage_engine}" if engine else ""))
 
     cfg = GNNConfig(feat_dim=g.feat_dim, hidden=args.hidden,
                     n_classes=int(g.labels.max()) + 1, fanouts=fanouts)
     gnn = GraphSAGE(cfg)
     rules = ShardingRules.default()
     opt = adamw(args.lr)
-    step_fn = jax.jit(build_isp_train_step(engine, gnn, opt, mesh, rules,
-                                           fanouts=fanouts),
-                      donate_argnums=0)
+    step_fn = build_train_step(loader, gnn, opt, mesh, rules)
 
     state = {"params": gnn.init(jax.random.key(0)),
              "opt": None, "step": jnp.zeros((), jnp.int32)}
@@ -117,26 +123,27 @@ def run_gnn(args, mesh):
             start = int(start)
             print(f"[train] resumed from step {start}")
 
-    rng = np.random.default_rng(1234)
-    t0 = time.time()
-    with mesh:
-        for i in range(start, args.steps):
-            targets = jnp.asarray(
-                np.random.default_rng(i).integers(0, g.num_nodes,
-                                                  args.batch), jnp.int32)
-            state, metrics = step_fn(state, targets, jax.random.key(i))
-            if (i + 1) % args.log_every == 0 or i + 1 == args.steps:
-                m = {k: float(v) for k, v in metrics.items()}
-                print(f"  step {i+1:5d} loss={m['loss']:.4f} "
-                      f"acc={m['acc']:.3f} |g|={m['grad_norm']:.3f}")
-            if saver and (i + 1) % args.ckpt_every == 0:
-                saver.save_async(i + 1, state)
+    def on_step(i, state, metrics):
+        if (i + 1) % args.log_every == 0 or i + 1 == args.steps:
+            m = {k: float(v) for k, v in metrics.items()}
+            print(f"  step {i+1:5d} loss={m['loss']:.4f} "
+                  f"acc={m['acc']:.3f} |g|={m['grad_norm']:.3f}")
+        if saver and (i + 1) % args.ckpt_every == 0:
+            saver.save_async(i + 1, state)
+
+    try:
+        with mesh:
+            state, stats = train_loop(loader, step_fn, state,
+                                      steps=args.steps, start=start,
+                                      on_step=on_step)
+    finally:
+        loader.close()
     if saver:
         saver.save_async(args.steps, state)
         saver.wait()
-    dt = time.time() - t0
-    print(f"[train] {args.steps - start} steps in {dt:.1f}s "
-          f"({(args.steps - start) / max(dt, 1e-9):.2f} steps/s)")
+    print(f"[train] {stats.steps} steps in {stats.wall_s:.1f}s "
+          f"({stats.steps_per_s:.2f} steps/s, consumer idle "
+          f"{stats.idle_fraction:.1%}) loader={loader.stats()}")
 
 
 def run_lm(args, mesh):

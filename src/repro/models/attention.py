@@ -27,6 +27,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.collectives import online_softmax_combine
+from repro.distributed.compat import shard_map
 
 NEG_INF = -1e30
 
@@ -206,7 +207,7 @@ def sharded_decode_attention(mesh, *, batch_axes, seq_axis: str = "model"):
         cache_spec = P(batch_axes, seq_axis, None, None)
         qspec = P(batch_axes, None, None)
         newkv_spec = P(batch_axes, None, None, None)
-        return jax.shard_map(
+        return shard_map(
             local, mesh=mesh,
             in_specs=(qspec, newkv_spec, newkv_spec, cache_spec, cache_spec,
                       P(), P()),

@@ -178,8 +178,10 @@ def _dot_flops(ins: Instruction, symbols: dict) -> float:
     if shape is None:
         return 0.0
     _, result_elems, _ = shape
-    # contraction size: lhs operand's dims at lhs_contracting_dims
-    om = re.search(r"dot\(%([\w.\-]+)", ins.line)
+    # contraction size: lhs operand's dims at lhs_contracting_dims.
+    # Some XLA versions print operand types before the name —
+    # `dot(f32[128,256]{1,0} %lhs, ...)` — so skip to the first %name.
+    om = re.search(r"dot\([^%)]*%([\w.\-]+)", ins.line)
     cd = _DOT_DIMS_RE.search(ins.line)
     contract = 1
     if cd and om:

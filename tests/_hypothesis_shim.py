@@ -1,0 +1,84 @@
+"""Tiny deterministic stand-in for ``hypothesis`` (optional dev extra).
+
+When the real library is installed it is always preferred (see
+``conftest.py``).  Without it, property tests still run: ``@given`` turns
+into a loop over ``max_examples`` seeded draws, so the suite exercises the
+same properties with deterministic (non-shrinking) examples.  Only the
+strategy surface this repo uses is implemented: ``integers``,
+``sampled_from``, ``lists``.
+"""
+
+from __future__ import annotations
+
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.integers(len(elements))])
+
+    @staticmethod
+    def lists(elem, *, min_size=0, max_size=10):
+        return _Strategy(lambda rng: [
+            elem.draw(rng)
+            for _ in range(rng.integers(min_size, max_size + 1))])
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        # hypothesis semantics: positional strategies fill the RIGHTMOST
+        # params; everything to their left is a pytest fixture
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        pos_names = names[len(names) - len(strats):] if strats else []
+        strat_map = dict(zip(pos_names, strats), **kw_strats)
+
+        def wrapper(**fixtures):
+            n = getattr(fn, "_shim_max_examples", DEFAULT_MAX_EXAMPLES)
+            # deterministic per-test example stream (str hash is randomized
+            # per process, so use a stable digest)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strat_map.items()}
+                fn(**fixtures, **drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # expose only the non-strategy params so pytest injects fixtures
+        # (mirrors hypothesis: strategy-supplied args vanish from the
+        # reported signature)
+        params = [p for p in sig.parameters.values()
+                  if p.name not in strat_map]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+    return deco

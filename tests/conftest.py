@@ -2,9 +2,19 @@
 1 CPU device; multi-device behaviour is tested via subprocesses that set
 --xla_force_host_platform_device_count themselves."""
 
+import importlib.util
+import sys
+
 import jax
 import numpy as np
 import pytest
+
+# ``hypothesis`` is an optional dev extra (see pyproject.toml).  When it is
+# missing, register the deterministic shim under its name *before* test
+# modules import it, so the property tests still collect and run.
+if importlib.util.find_spec("hypothesis") is None:
+    import _hypothesis_shim
+    sys.modules["hypothesis"] = _hypothesis_shim
 
 
 @pytest.fixture(scope="session")

@@ -14,12 +14,13 @@ def test_batches_in_order_and_deterministic(small_graph):
     try:
         b0 = pipe.get_batch(0)
         b1 = pipe.get_batch(1)
-        assert b0["targets"].shape == (8,)
-        assert b0["hop_feats"][2].shape == (8, 3, 2, small_graph.feat_dim)
+        assert b0.targets.shape == (8,)
+        assert b0.hop_feats[2].shape == (8, 3, 2, small_graph.feat_dim)
+        assert b0.trace is not None
         # deterministic per index
         again = prod(0)
-        assert (again["targets"] == b0["targets"]).all()
-        assert not (b1["targets"] == b0["targets"]).all()
+        assert (again.targets == b0.targets).all()
+        assert not (b1.targets == b0.targets).all()
     finally:
         pipe.close()
 

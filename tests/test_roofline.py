@@ -83,10 +83,11 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.launch.mesh import make_mesh
 from repro.roofline.hlo_parse import analyze
+from repro.distributed.compat import shard_map
 mesh = make_mesh((8,), ("x",))
 def f(a):
     return jax.lax.psum(a, "x")
-g = jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P(),
+g = shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P(),
                   check_vma=False)
 c = jax.jit(g).lower(jnp.zeros((8, 1024), jnp.float32)).compile()
 costs = analyze(c.as_text(), 8)

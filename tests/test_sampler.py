@@ -37,6 +37,24 @@ def test_khop_shapes_and_validity(small_graph):
     assert np.isin(tr.subgraph_nodes, np.arange(g.num_nodes)).all()
 
 
+def test_khop_trace_equal_fanouts(small_graph):
+    """Regression: repeated fanout values like (4, 4) must not drop
+    touched-node records (the trace loop used to compare fanout *values*
+    against fanouts[-1] instead of iterating by position)."""
+    g = small_graph
+    targets = np.arange(12)
+    tr = sample_khop(g, targets, (4, 4), seed=0)
+    assert [h.shape for h in tr.hops] == [(12,), (12, 4), (12, 4, 4)]
+    # every expanded frontier is in the trace: targets + the 12*4 hop-1 nodes
+    assert tr.touched_nodes.size == 12 + 12 * 4
+    np.testing.assert_array_equal(tr.touched_nodes[:12], targets)
+    np.testing.assert_array_equal(tr.touched_nodes[12:],
+                                  tr.hops[1].reshape(-1))
+    # three equal fanouts: targets + hop1 + hop2 are all expanded
+    tr3 = sample_khop(g, targets, (3, 3, 3), seed=1)
+    assert tr3.touched_nodes.size == 12 + 12 * 3 + 12 * 9
+
+
 def test_khop_deterministic_per_seed(small_graph):
     a = sample_khop(small_graph, np.arange(8), (5, 2), seed=7)
     b = sample_khop(small_graph, np.arange(8), (5, 2), seed=7)

@@ -18,7 +18,7 @@ def mesh11():
 
 def test_basic_resolution(mesh11):
     spec = logical_to_spec(("batch", "seq"), RULES, mesh11)
-    assert spec == P(("data",),)  # 'pod' absent -> dropped; seq None trimmed
+    assert spec == P("data")  # 'pod' absent -> dropped; seq None trimmed
 
 
 def test_divisibility_fallback(mesh11):
