@@ -24,6 +24,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--fanouts", default="10,5")
     ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="async prefetch queue depth (0 = synchronous)")
     ap.add_argument("--out", default="BENCH_backends.json")
     args = ap.parse_args(argv)
 
@@ -48,7 +50,8 @@ def main(argv=None):
     results = {}
     for backend in args.backends.split(","):
         loader = make_loader(backend, g, batch_size=args.batch,
-                             fanouts=fanouts, mesh=mesh)
+                             fanouts=fanouts, mesh=mesh,
+                             prefetch=args.prefetch)
         try:
             step = build_train_step(loader, gnn, opt, mesh, rules)
             p = gnn.init(jax.random.key(0))
@@ -82,6 +85,7 @@ def main(argv=None):
         "batch": args.batch,
         "fanouts": list(fanouts),
         "hidden": args.hidden,
+        "prefetch": args.prefetch,
         "backend_default": jax.default_backend(),
         "platform": platform.platform(),
         "results": results,

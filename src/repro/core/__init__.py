@@ -20,7 +20,8 @@ from repro.core.loader import (LOADERS, Minibatch, RunStats, SubgraphLoader,
                                batch_targets, build_train_step, make_loader,
                                register_loader, train_loop)
 from repro.core.partition import PartitionedGraph, partition_graph
-from repro.core.pipeline import (PipelineStats, ProducerConsumerPipeline,
+from repro.core.pipeline import (PipelineStats, PrefetchingLoader,
+                                 ProducerConsumerPipeline,
                                  make_host_producer)
 from repro.core.sampler import (DEFAULT_FANOUTS, SampleTrace, sample_khop,
                                 sample_khop_jax, sample_one_hop_jax,

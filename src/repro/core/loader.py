@@ -25,6 +25,12 @@ model and the resulting latency is imposed on production
 (``produce_delay_s`` of the pipeline), connecting the performance simulator
 to live training.
 
+Any backend can additionally be wrapped in asynchronous prefetch
+(``make_loader(..., prefetch=N)`` -> ``pipeline.PrefetchingLoader``): a
+background worker produces batch ``i+1`` — device dispatch and the
+simulated-storage trace included — while the consumer trains on batch
+``i``, with bit-identical results to the synchronous path.
+
 Randomness contract: targets for batch ``i`` come from
 ``np.random.default_rng(seed + i)``; device backends draw sampling
 randomness from ``jax.random.fold_in(jax.random.key(seed), i)`` with one
@@ -102,13 +108,25 @@ def register_loader(name: str):
 
 def make_loader(name: str, g: CSRGraph, *, batch_size: int = 64,
                 fanouts: Sequence[int] = DEFAULT_FANOUTS, mesh=None,
-                seed: int = 0, storage_engine=None, **kw) -> "SubgraphLoader":
-    """Build a registered backend loader over ``g``."""
+                seed: int = 0, storage_engine=None, prefetch: int = 0,
+                **kw) -> "SubgraphLoader":
+    """Build a registered backend loader over ``g``.
+
+    ``prefetch > 0`` wraps the loader in a ``PrefetchingLoader`` of that
+    queue depth: a background worker produces batch ``i+1`` (device
+    dispatch + simulated-storage trace included) while the consumer runs
+    step ``i``.  Per-batch-seed determinism makes the prefetched batches
+    bit-identical to synchronous ones.
+    """
     if name not in LOADERS:
         raise KeyError(f"unknown backend {name!r}; have {sorted(LOADERS)}")
-    return LOADERS[name](g, batch_size=batch_size, fanouts=tuple(fanouts),
-                         mesh=mesh, seed=seed, storage_engine=storage_engine,
-                         **kw)
+    loader = LOADERS[name](g, batch_size=batch_size, fanouts=tuple(fanouts),
+                           mesh=mesh, seed=seed,
+                           storage_engine=storage_engine, **kw)
+    if prefetch:
+        from repro.core.pipeline import PrefetchingLoader
+        loader = PrefetchingLoader(loader, depth=prefetch)
+    return loader
 
 
 def batch_targets(g: CSRGraph, idx: int, batch_size: int,
@@ -150,19 +168,25 @@ class _LoaderBase:
             self.simulated_storage_s += delay
         return delay
 
+    def storage_cost_trace(self, idx: int) -> SampleTrace:
+        """The cost-model access trace for device backends, which have no
+        host trace: a numpy re-sample with the same algorithmic event
+        counts (host RNG stream)."""
+        return sample_khop(self.g, self.targets(idx), self.fanouts,
+                           seed=self.seed + idx)
+
     def impose_storage_cost(self, idx: int) -> None:
-        """Device backends have no host trace; re-sample one purely for the
-        cost model (same algorithmic event counts, host RNG stream) and
-        impose the simulated latency.  The numpy re-sample runs on the
-        consumer thread, so its real cost is deducted from the sleep — the
-        consumer-visible delay stays equal to the *modeled* latency and the
-        backend comparison is not skewed by cost-model overhead."""
+        """Replay batch ``idx``'s cost-model trace against the attached
+        engine and impose the simulated latency.  The numpy re-sample's
+        real cost is deducted from the sleep, so the visible delay stays
+        equal to the *modeled* latency and the backend comparison is not
+        skewed by cost-model overhead.  This runs inside ``get_batch``, so
+        under a ``PrefetchingLoader`` both the re-sample and the sleep
+        happen in the prefetch worker — off the consumer's critical path."""
         if self.storage_engine is None:
             return
         t0 = time.perf_counter()
-        delay = self.storage_delay(
-            sample_khop(self.g, self.targets(idx), self.fanouts,
-                        seed=self.seed + idx))
+        delay = self.storage_delay(self.storage_cost_trace(idx))
         time.sleep(max(0.0, delay - (time.perf_counter() - t0)))
 
     def stats(self) -> dict:
@@ -282,6 +306,9 @@ class PallasSubgraphLoader(_LoaderBase):
         self.indptr = jnp.asarray(g.indptr, jnp.int32)
         self.indices = jnp.asarray(g.indices, jnp.int32)
         self.features = jnp.asarray(g.features, jnp.float32)
+        # labels live on device too: the per-batch gather happens inside
+        # the jitted prepare, not via host numpy indexing per call
+        self.labels = jnp.asarray(g.labels, jnp.int32)
         self.max_degree = int(g.degrees().max()) if g.num_edges else 1
         self._key = jax.random.key(seed)
         self._ops = ops
@@ -291,11 +318,12 @@ class PallasSubgraphLoader(_LoaderBase):
         maxd = self.max_degree
 
         @jax.jit
-        def prepare(indptr, indices, features, targets, key):
+        def prepare(indptr, indices, features, labels, targets, key):
             hops = ops.sample_khop_kernel(indptr, indices, targets, fanouts_,
                                           key=key, max_degree=maxd)
             hop_feats = [ops.feature_gather_rows(features, h) for h in hops]
-            return hops, hop_feats
+            batch_labels = jnp.take(labels, targets)
+            return hops, hop_feats, batch_labels
 
         self._prepare = prepare
 
@@ -303,10 +331,10 @@ class PallasSubgraphLoader(_LoaderBase):
         targets = self.targets(idx)
         self.impose_storage_cost(idx)
         key = self._jax.random.fold_in(self._key, idx)
-        hops, hop_feats = self._prepare(self.indptr, self.indices,
-                                        self.features,
-                                        self._jnp.asarray(targets), key)
-        labels = self.g.labels[targets]
+        hops, hop_feats, labels = self._prepare(self.indptr, self.indices,
+                                                self.features, self.labels,
+                                                self._jnp.asarray(targets),
+                                                key)
         return Minibatch(targets=targets, hop_ids=list(hops),
                          hop_feats=list(hop_feats), labels=labels)
 

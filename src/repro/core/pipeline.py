@@ -69,6 +69,112 @@ def make_host_producer(g: CSRGraph, batch_size: int, fanouts=DEFAULT_FANOUTS,
     return produce
 
 
+class PrefetchingLoader:
+    """Backend-agnostic asynchronous prefetch: overlap data preparation
+    with training (the paper's core pipelining claim, Fig. 4).
+
+    Wraps any ``SubgraphLoader``: a single background worker thread runs
+    ``inner.get_batch(i+1)`` — including device kernel dispatch and the
+    simulated-storage cost-model trace (``impose_storage_cost``), which
+    therefore leaves the consumer's critical path — while the consumer
+    trains on batch ``i``.  ``depth`` is the bounded-queue capacity
+    (``depth=2`` is classic double buffering).
+
+    Determinism: batches are pure functions of the batch index (per-batch
+    seed contract), production is single-worker and strictly ordered, so
+    prefetched batches are bit-identical to synchronous ``get_batch``
+    calls (asserted in tests/test_prefetch.py).  A non-sequential request
+    (e.g. checkpoint-resume fast-forward) restarts the worker at the new
+    index instead of draining through the gap.
+    """
+
+    def __init__(self, inner, depth: int = 2):
+        self.inner = inner
+        self.backend = getattr(inner, "backend", "?")
+        self.fanouts = tuple(inner.fanouts)
+        self.depth = max(1, int(depth))
+        self._queue: queue.Queue = queue.Queue(maxsize=self.depth)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._expect: int | None = None
+        self._prefetched = 0
+        self._produce_times: list[float] = []
+        self._restarts = 0
+
+    # -- producer side -------------------------------------------------------
+    def _worker(self, start: int, q: queue.Queue, stop: threading.Event):
+        # q/stop are captured per worker generation: a worker that outlives
+        # a restart (join timeout mid-production) drains into its own dead
+        # queue instead of corrupting the replacement's ordering
+        idx = start
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            try:
+                item = (idx, self.inner.get_batch(idx), None)
+            except BaseException as e:          # surfaced on the consumer
+                item = (idx, None, e)
+            self._produce_times.append(time.perf_counter() - t0)
+            while not stop.is_set():            # backpressure, abortable
+                try:
+                    q.put(item, timeout=0.05)
+                    break
+                except queue.Full:
+                    continue
+            if item[2] is not None:
+                return
+            idx += 1
+
+    def _restart(self, start: int):
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join(timeout=5.0)
+            self._restarts += 1
+        # always a fresh queue: close() joins the worker but leaves its
+        # prefetched items behind, and they must not leak into a restart
+        self._queue = queue.Queue(maxsize=self.depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._worker, args=(start, self._queue, self._stop),
+            daemon=True)
+        self._thread.start()
+        self._expect = start
+
+    # -- consumer side -------------------------------------------------------
+    def get_batch(self, idx: int, timeout: float = 60.0):
+        if self._thread is None or idx != self._expect:
+            self._restart(idx)
+        t0 = time.perf_counter()
+        while True:
+            try:
+                got, batch, err = self._queue.get(timeout=0.05)
+                break
+            except queue.Empty:
+                if time.perf_counter() - t0 > timeout:
+                    raise TimeoutError(f"batch {idx} not prefetched")
+        if err is not None:
+            self._expect = None                 # force a clean restart
+            raise err
+        assert got == idx, f"prefetch order violated: {got} != {idx}"
+        self._expect = idx + 1
+        self._prefetched += 1
+        return batch
+
+    def stats(self) -> dict:
+        times = self._produce_times
+        return dict(self.inner.stats(),
+                    prefetch_depth=self.depth,
+                    prefetched=self._prefetched,
+                    prefetch_restarts=self._restarts,
+                    mean_prefetch_s=(float(np.mean(times)) if times else 0.0))
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        self.inner.close()
+
+
 class ProducerConsumerPipeline:
     """Bounded-queue pipeline: n_workers producer threads + caller-driven
     consumer.  ``produce_fn(batch_idx) -> batch``; consumption order is
@@ -90,6 +196,7 @@ class ProducerConsumerPipeline:
         self._stop = threading.Event()
         self._queue_depth = queue_depth
         self._next_issue = 0
+        self._watermark = 0          # lowest index still consumable
         self._threads = [
             threading.Thread(target=self._worker, daemon=True)
             for _ in range(n_workers)]
@@ -109,7 +216,10 @@ class ProducerConsumerPipeline:
             batch = self.produce_fn(idx)
             dt = time.perf_counter() - t0
             with self._results_lock:
-                if idx in self._results:
+                if idx < self._watermark:
+                    # issued before a forward jump; can never be consumed
+                    self.stats.duplicates_dropped += 1
+                elif idx in self._results:
                     self.stats.duplicates_dropped += 1
                 else:
                     self._results[idx] = batch
@@ -117,12 +227,15 @@ class ProducerConsumerPipeline:
                 self._results_lock.notify_all()
 
     def _ensure_issued(self, upto: int):
-        # Consumption is strictly by increasing index, so the first request
-        # defines the start of the stream: fast-forward past lower indices
-        # instead of producing them (checkpoint resume at step N must not
-        # force production of batches 0..N-1).
-        if self._next_issue == 0 and upto > 0:
+        # Consumption is strictly by increasing index, so any forward jump
+        # (first request, checkpoint resume, prefetch restart) makes the
+        # gap unconsumable: fast-forward past it instead of producing it.
+        if upto > self._next_issue:
             self._next_issue = upto
+            with self._results_lock:
+                # results below the jump can never be consumed — free them
+                for k in [k for k in self._results if k < upto]:
+                    del self._results[k]
         while self._next_issue <= upto + self._queue_depth - 1:
             self._tasks.put(self._next_issue)
             self._issued[self._next_issue] = time.perf_counter()
@@ -141,6 +254,8 @@ class ProducerConsumerPipeline:
 
     # -- consumer side -------------------------------------------------------
     def get_batch(self, idx: int, timeout: float = 30.0):
+        with self._results_lock:
+            self._watermark = max(self._watermark, idx)
         self._ensure_issued(idx)
         t0 = time.perf_counter()
         with self._results_lock:

@@ -1,20 +1,27 @@
-"""Pallas TPU kernel: fused feature gather + fanout-mean aggregate.
+"""Pallas TPU kernel: tiled feature gather (+ optional fanout-mean).
 
-The GNN data-preparation hot spot (paper Fig. 1 steps ②-③): for each
-target, gather its K sampled neighbors' feature rows from the (possibly
-huge) feature table and mean-reduce them.
+The GNN data-preparation hot spot (paper Fig. 1 steps ②-③): gather sampled
+neighbors' feature rows from the (possibly huge) feature table, and for the
+aggregate step mean-reduce them over the fanout.
 
-TPU adaptation (DESIGN.md §2/§5): a GPU implementation would do warp-level
-gathers; on TPU the idiomatic form is *scalar-prefetched dynamic block
-indexing* — the sampled IDs are prefetched into SMEM and used inside the
-table's BlockSpec ``index_map``, so the Pallas pipeline DMAs exactly the
-needed (1, F) feature row from HBM into VMEM per grid step.  The mean
-accumulates in the output block across the inner (fanout) grid dim; no
-(M, K, F) intermediate ever materializes — the same "ship the reduction,
-not the raw rows" principle as the paper's ISP unit.
+TPU adaptation (DESIGN.md §2/§5): the feature table stays in HBM (the
+"flash array") behind an ``ANY``-memory ref; the sampled IDs are
+scalar-prefetched into SMEM; each grid step stages a *tile* of ``TILE_M``
+rows into a VMEM scratch buffer with per-row async copies (the firmware's
+LBA->page DMA, step ③) and then operates on the whole ``(TILE_M, F)``
+block at once.  Row-granular HBM traffic is unchanged — only the requested
+rows ever cross — but grid dispatch is amortized over the tile, which is
+what closes the interpreter/dispatch gap on the data-preparation path
+(one grid step used to move a single ``(1, F)`` row).
 
-Grid: (M_blocks, K).  Block shapes: table row tile (1, F_pad), output tile
-(1, F_pad) revisited K times (accumulate), ids in SMEM via scalar prefetch.
+Two entry points share the kernel:
+
+* ``feature_gather_rows``: grid ``(ceil(R / TILE_M),)`` — a flat row
+  gather, one pallas_call per hop tensor.
+* ``feature_gather_mean``: grid ``(ceil(M / TILE_M), K)`` — the output
+  tile is revisited across the inner fanout dim and accumulates the mean;
+  no ``(M, K, F)`` intermediate ever materializes ("ship the reduction,
+  not the raw rows", the paper's ISP principle).
 """
 
 from __future__ import annotations
@@ -26,37 +33,84 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Default rows staged per grid step.  Sweeps on this container put the
+# dispatch-amortization knee at 8-64 rows; 64 keeps the VMEM tile
+# (64 x F floats) small while making the grid ~64x shorter.
+TILE_ROWS = 64
 
-def _kernel(ids_ref, table_ref, out_ref, *, K: int):
+
+def _kernel(ids_ref, table_ref, out_ref, rows_ref, sem, *, tile_m: int,
+            K: int):
+    i = pl.program_id(0)
     k = pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    out_ref[...] += table_ref[...].astype(out_ref.dtype) / K
+    def stage(j, carry):
+        # per-row DMA: HBM table row -> VMEM tile slot j (step ③)
+        row = ids_ref[i * tile_m + j, k]
+        cp = pltpu.make_async_copy(table_ref.at[pl.ds(row, 1), :],
+                                   rows_ref.at[pl.ds(j, 1), :], sem)
+        cp.start()
+        cp.wait()
+        return carry
+
+    jax.lax.fori_loop(0, tile_m, stage, 0)
+    out_ref[...] += rows_ref[...].astype(out_ref.dtype) / K
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def feature_gather_mean(table, ids, *, interpret: bool = True):
-    """table: (N, F); ids: (M, K) int32 -> (M, F) mean of gathered rows."""
-    N, F = table.shape
-    M, K = ids.shape
-
-    grid = (M, K)
-    kernel = functools.partial(_kernel, K=K)
-    out = pl.pallas_call(
+def _gather_call(table, ids2d, *, tile_m: int, interpret: bool):
+    """ids2d: (M, K) int32, M a multiple of tile_m -> (M, F) float32
+    fanout-mean of gathered rows."""
+    M, K = ids2d.shape
+    _, F = table.shape
+    kernel = functools.partial(_kernel, tile_m=tile_m, K=K)
+    return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
+            num_scalar_prefetch=1,                    # ids
+            grid=(M // tile_m, K),
             in_specs=[
-                # one feature row per grid step, row chosen by prefetched id
-                pl.BlockSpec((1, F), lambda m, k, ids: (ids[m, k], 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),  # table stays in HBM
             ],
-            out_specs=pl.BlockSpec((1, F), lambda m, k, ids: (m, 0)),
+            out_specs=pl.BlockSpec((tile_m, F), lambda i, k, ids: (i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((tile_m, F), table.dtype),  # staged row tile
+                pltpu.SemaphoreType.DMA,
+            ],
         ),
         out_shape=jax.ShapeDtypeStruct((M, F), jnp.float32),
         interpret=interpret,
-    )(ids, table)
-    return out.astype(table.dtype)
+    )(ids2d, table)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def feature_gather_mean(table, ids, *, tile_m: int = TILE_ROWS,
+                        interpret: bool = True):
+    """table: (N, F); ids: (M, K) int32 -> (M, F) mean of gathered rows.
+
+    M is padded up to a multiple of ``tile_m`` (pad rows gather row 0 and
+    are sliced off), so tile boundaries never change results."""
+    M, K = ids.shape
+    pad = (-M) % tile_m
+    if pad:
+        ids = jnp.pad(ids, ((0, pad), (0, 0)))
+    out = _gather_call(table, ids.astype(jnp.int32), tile_m=tile_m,
+                       interpret=interpret)
+    return out[:M].astype(table.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def feature_gather_rows(table, ids, *, tile_m: int = TILE_ROWS,
+                        interpret: bool = True):
+    """table: (N, F); ids: (R,) int32 -> (R, F) row gather — the K=1 case,
+    one pallas_call for the whole hop tensor."""
+    R = ids.shape[0]
+    pad = (-R) % tile_m
+    if pad:
+        ids = jnp.pad(ids, (0, pad))
+    out = _gather_call(table, ids.astype(jnp.int32)[:, None], tile_m=tile_m,
+                       interpret=interpret)
+    return out[:R].astype(table.dtype)

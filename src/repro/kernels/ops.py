@@ -20,6 +20,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pl
 from repro.kernels.flash_attention import flash_attention as _flash_pl
 from repro.kernels.feature_gather import feature_gather_mean as _gather_pl
+from repro.kernels.feature_gather import feature_gather_rows as _rows_pl
 from repro.kernels.neighbor_sample import neighbor_sample as _sample_pl
 from repro.kernels.ssd_chunk_scan import ssd_chunk_scan as _ssd_pl
 
@@ -78,10 +79,14 @@ def sample_khop_kernel(indptr, indices, targets, fanouts, *, key,
 
 
 def feature_gather_rows(table, ids):
-    """(N, F), ids (...,) int32 -> (..., F) row gather via the Pallas
-    gather kernel (fanout dim = 1, so the mean is the row itself)."""
+    """(N, F), ids (...,) int32 -> (..., F) row gather: ONE pallas_call per
+    hop tensor, staging TILE_ROWS rows per grid step."""
     F = table.shape[1]
-    out = feature_gather_mean(table, ids.reshape(-1, 1).astype(jnp.int32))
+    flat = ids.reshape(-1).astype(jnp.int32)
+    if not _ENABLED:
+        out = ref.feature_gather_mean(table, flat[:, None])
+    else:
+        out = _rows_pl(table, flat, interpret=_interpret())
     return out.reshape(ids.shape + (F,)).astype(table.dtype)
 
 

@@ -35,6 +35,10 @@ def _parse():
                     choices=("none", "dram", "pmem", "mmap", "directio",
                              "isp", "isp_oracle", "fpga"),
                     help="simulated storage tier attached to the loader")
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="async prefetch queue depth (0 = synchronous; "
+                         "2 = double buffering): overlap data preparation "
+                         "with training")
     ap.add_argument("--dataset", default="reddit")
     ap.add_argument("--large-scale", action="store_true")
     ap.add_argument("--steps", type=int, default=50)
@@ -98,10 +102,12 @@ def run_gnn(args, mesh):
         from repro.storage import make_engine
         engine = make_engine(args.storage_engine, g)
     loader = make_loader(args.backend, g, batch_size=args.batch,
-                         fanouts=fanouts, mesh=mesh, storage_engine=engine)
+                         fanouts=fanouts, mesh=mesh, storage_engine=engine,
+                         prefetch=args.prefetch)
     print(f"[train] {g.name}: {g.num_nodes} nodes {g.num_edges} edges, "
           f"backend={args.backend}"
-          + (f", storage={args.storage_engine}" if engine else ""))
+          + (f", storage={args.storage_engine}" if engine else "")
+          + (f", prefetch={args.prefetch}" if args.prefetch else ""))
 
     cfg = GNNConfig(feat_dim=g.feat_dim, hidden=args.hidden,
                     n_classes=int(g.labels.max()) + 1, fanouts=fanouts)

@@ -4,11 +4,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.core import rmat_graph
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention as decode_pl
 from repro.kernels.feature_gather import feature_gather_mean as gather_pl
+from repro.kernels.feature_gather import feature_gather_rows as rows_pl
 from repro.kernels.neighbor_sample import neighbor_sample as sample_pl
 from repro.kernels.ssd_chunk_scan import ssd_chunk_scan as ssd_pl
 
@@ -62,6 +65,103 @@ def test_neighbor_sample_ops_wrapper(small_graph):
     expect = ref.neighbor_sample(jnp.asarray(g.indptr, jnp.int32),
                                  jnp.asarray(g.indices), targets, rand)
     assert (np.asarray(out) == np.asarray(expect)).all()
+
+
+# ---------------------------------------------------------------------------
+# tiled-kernel properties: tile boundaries + block-spanning neighbor lists
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 70), st.sampled_from([1, 4, 10]),
+       st.sampled_from([1, 3, 8, 16]))
+def test_neighbor_sample_tile_boundaries(M, S, tile_m):
+    """Tiled kernel == oracle for any (M, tile_m), including M smaller
+    than, equal to, and not a multiple of the tile."""
+    g = rmat_graph(128, 1024, seed=7)
+    rng = np.random.default_rng(M * 31 + S * 7 + tile_m)
+    indptr = jnp.asarray(g.indptr, jnp.int32)
+    indices = jnp.asarray(g.indices, jnp.int32)
+    targets = jnp.asarray(rng.integers(0, g.num_nodes, M), jnp.int32)
+    rand = jnp.asarray(rng.integers(0, 2**31 - 1, (M, S)), jnp.int32)
+    block_e = max(128, int(-(-int(g.degrees().max()) // 128) * 128))
+    out = sample_pl(indptr, indices, targets, rand, block_e=block_e,
+                    tile_m=tile_m)
+    expect = ref.neighbor_sample(indptr, indices, targets, rand)
+    assert (np.asarray(out) == np.asarray(expect)).all()
+
+
+def test_neighbor_sample_list_spanning_two_blocks():
+    """A max-degree (== block_e) neighbor list that straddles an edge-block
+    boundary must be served exactly by the staged two-block tile."""
+    block_e = 128
+    degs = [100, block_e, 56]          # node 1's list occupies [100, 228)
+    n = len(degs)
+    indptr_np = np.zeros(n + 1, np.int64)
+    np.cumsum(degs, out=indptr_np[1:])
+    rng = np.random.default_rng(5)
+    indices_np = rng.integers(0, n, indptr_np[-1]).astype(np.int32)
+    indptr = jnp.asarray(indptr_np, jnp.int32)
+    indices = jnp.asarray(indices_np)
+    targets = jnp.asarray(np.array([1, 1, 0, 2, 1], np.int32))
+    rand = jnp.asarray(rng.integers(0, 2**31 - 1, (5, 9)), jnp.int32)
+    out = sample_pl(indptr, indices, targets, rand, block_e=block_e,
+                    tile_m=2)
+    expect = ref.neighbor_sample(indptr, indices, targets, rand)
+    assert (np.asarray(out) == np.asarray(expect)).all()
+    # the spanning list really does cross: its entries live in two blocks
+    assert indptr_np[1] // block_e != (indptr_np[2] - 1) // block_e
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 130), st.sampled_from([1, 2, 5]),
+       st.sampled_from([1, 3, 8, 64]))
+def test_feature_gather_tile_boundaries(M, K, tile_m):
+    """Tiled gather == oracle for any (rows, tile) combination."""
+    rng = np.random.default_rng(M * 13 + K * 5 + tile_m)
+    table = jnp.asarray(rng.standard_normal((96, 33)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 96, (M, K)), jnp.int32)
+    out = gather_pl(table, ids, tile_m=tile_m)
+    expect = ref.feature_gather_mean(table, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+    flat = jnp.asarray(rng.integers(0, 96, M), jnp.int32)
+    rows = rows_pl(table, flat, tile_m=tile_m)
+    np.testing.assert_array_equal(np.asarray(rows),
+                                  np.asarray(table)[np.asarray(flat)])
+
+
+def test_neighbor_sample_degree0_at_block_aligned_end():
+    """A zero-degree node whose CSR offset sits at the end of an exactly
+    block-aligned edge array must not fetch past the padded array (the
+    in-kernel base clamp)."""
+    block_e = 128
+    degs = [128, 128, 0]               # E = 256, a multiple of block_e
+    n = len(degs)
+    indptr_np = np.zeros(n + 1, np.int64)
+    np.cumsum(degs, out=indptr_np[1:])
+    rng = np.random.default_rng(11)
+    indices_np = rng.integers(0, n, indptr_np[-1]).astype(np.int32)
+    indptr = jnp.asarray(indptr_np, jnp.int32)
+    indices = jnp.asarray(indices_np)
+    targets = jnp.asarray(np.array([2, 1, 2, 0], np.int32))
+    rand = jnp.asarray(rng.integers(0, 2**31 - 1, (4, 6)), jnp.int32)
+    out = sample_pl(indptr, indices, targets, rand, block_e=block_e,
+                    tile_m=4)
+    expect = ref.neighbor_sample(indptr, indices, targets, rand)
+    assert (np.asarray(out) == np.asarray(expect)).all()
+    # the degree-0 node really did sample itself
+    assert (np.asarray(out)[0] == 2).all()
+
+
+def test_feature_gather_rows_single_call_nd():
+    """ops.feature_gather_rows handles n-d hop tensors in one call."""
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.standard_normal((50, 17)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 50, (7, 3, 2)), jnp.int32)
+    out = ops.feature_gather_rows(table, ids)
+    assert out.shape == (7, 3, 2, 17)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(table)[np.asarray(ids)])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,270 @@
+"""PrefetchingLoader: ordering, bit-identical batches vs the synchronous
+path, clean shutdown on early exit, restart on non-sequential access, and
+idle/busy accounting under ``train_loop``."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GNNConfig, GraphSAGE, Minibatch, PrefetchingLoader,
+                        build_train_step, make_loader, train_loop)
+from repro.optim import adamw
+
+FANOUTS = (3, 2)
+BATCH = 8
+
+
+class _RecordingLoader:
+    """Minimal SubgraphLoader double: records which thread produced what."""
+
+    backend = "recording"
+    fanouts = FANOUTS
+
+    def __init__(self, fail_at=None, delay_s=0.0):
+        self.calls = []
+        self.threads = set()
+        self.fail_at = fail_at
+        self.delay_s = delay_s
+        self.closed = False
+
+    def get_batch(self, idx):
+        if self.fail_at is not None and idx == self.fail_at:
+            raise RuntimeError(f"boom at {idx}")
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        self.calls.append(idx)
+        self.threads.add(threading.get_ident())
+        return {"idx": idx, "payload": np.full((4,), idx)}
+
+    def stats(self):
+        return {"backend": self.backend, "calls": len(self.calls)}
+
+    def close(self):
+        self.closed = True
+
+
+def test_prefetch_ordering_and_worker_thread():
+    inner = _RecordingLoader()
+    pf = PrefetchingLoader(inner, depth=2)
+    try:
+        for i in range(6):
+            b = pf.get_batch(i)
+            assert b["idx"] == i
+        # production happened on the worker thread, not the consumer's
+        assert threading.get_ident() not in inner.threads
+        # single worker produces strictly in order
+        assert inner.calls[:6] == list(range(6))
+        s = pf.stats()
+        assert s["prefetched"] == 6
+        assert s["prefetch_depth"] == 2
+    finally:
+        pf.close()
+    assert inner.closed
+
+
+def test_prefetch_runs_ahead_of_consumer():
+    """While the consumer sits on batch i, the worker fills the queue with
+    the next ``depth`` batches — the overlap the paper's Fig. 4 pipelines."""
+    inner = _RecordingLoader()
+    pf = PrefetchingLoader(inner, depth=3)
+    try:
+        pf.get_batch(0)
+        deadline = time.time() + 5.0
+        # worker should produce 1..3 (queue depth) with no further requests
+        while len(inner.calls) < 4 and time.time() < deadline:
+            time.sleep(0.01)
+        assert len(inner.calls) >= 4
+    finally:
+        pf.close()
+
+
+def test_prefetch_restart_on_nonsequential_access():
+    inner = _RecordingLoader()
+    pf = PrefetchingLoader(inner, depth=2)
+    try:
+        assert pf.get_batch(0)["idx"] == 0
+        assert pf.get_batch(7)["idx"] == 7      # checkpoint-resume jump
+        assert pf.get_batch(8)["idx"] == 8
+        assert pf.stats()["prefetch_restarts"] == 1
+        # the gap 1..6 was never produced
+        assert 4 not in inner.calls
+    finally:
+        pf.close()
+
+
+def test_prefetch_propagates_worker_exception():
+    pf = PrefetchingLoader(_RecordingLoader(fail_at=2), depth=2)
+    try:
+        assert pf.get_batch(0)["idx"] == 0
+        assert pf.get_batch(1)["idx"] == 1
+        with pytest.raises(RuntimeError, match="boom at 2"):
+            pf.get_batch(2)
+        # loader recovers if the consumer retries past the poison batch
+        assert pf.get_batch(3)["idx"] == 3
+    finally:
+        pf.close()
+
+
+def test_prefetch_clean_shutdown_on_early_exit():
+    """close() with a full queue and a mid-production worker must not hang
+    or error — the early-exit path of train_loop."""
+    inner = _RecordingLoader(delay_s=0.02)
+    pf = PrefetchingLoader(inner, depth=4)
+    pf.get_batch(0)                              # start the worker
+    t0 = time.perf_counter()
+    pf.close()
+    assert time.perf_counter() - t0 < 5.0
+    assert inner.closed
+    assert not pf._thread                        # worker joined
+
+
+def test_prefetch_close_without_use():
+    inner = _RecordingLoader()
+    pf = PrefetchingLoader(inner, depth=2)
+    pf.close()
+    assert inner.closed
+
+
+def test_prefetch_get_batch_after_close_discards_stale_queue():
+    """close() joins the worker but leaves prefetched items behind; a
+    later get_batch must not consume them out of order."""
+    inner = _RecordingLoader()
+    pf = PrefetchingLoader(inner, depth=3)
+    pf.get_batch(0)
+    deadline = time.time() + 5.0
+    while len(inner.calls) < 3 and time.time() < deadline:
+        time.sleep(0.01)                        # let batches 1-2 queue up
+    pf.close()
+    assert pf.get_batch(5)["idx"] == 5          # not the stale batch 1
+    pf.close()
+
+
+def test_prefetch_forward_jump_over_host_backend(small_graph):
+    """A mid-run forward jump through the prefetcher must fast-forward the
+    host backend's pipeline, not force production of the whole gap."""
+    loader = make_loader("host", small_graph, batch_size=4, fanouts=(2,),
+                         prefetch=2)
+    sync = make_loader("host", small_graph, batch_size=4, fanouts=(2,))
+    try:
+        assert loader.get_batch(0).targets.shape == (4,)
+        mb = loader.get_batch(500)              # jump: gap never produced
+        np.testing.assert_array_equal(np.asarray(mb.targets),
+                                      np.asarray(sync.get_batch(500).targets))
+        pipe = loader.inner.pipeline
+        # bounded buffering: nothing from the gap piles up in results
+        assert len(pipe._results) <= pipe._queue_depth + pipe.n_workers
+    finally:
+        loader.close()
+        sync.close()
+
+
+def _assert_minibatch_identical(a: Minibatch, b: Minibatch, msg=""):
+    np.testing.assert_array_equal(np.asarray(a.targets),
+                                  np.asarray(b.targets), err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(a.labels),
+                                  np.asarray(b.labels), err_msg=msg)
+    for t, (x, y) in enumerate(zip(a.hop_ids, b.hop_ids)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg} hop_ids[{t}]")
+    for t, (x, y) in enumerate(zip(a.hop_feats, b.hop_feats)):
+        # bit-identical: same jitted computation, same inputs
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg} hop_feats[{t}]")
+
+
+@pytest.mark.parametrize("backend", ("host", "isp", "pallas"))
+def test_prefetched_bit_identical_to_synchronous(backend, small_graph,
+                                                 host_mesh):
+    sync = make_loader(backend, small_graph, batch_size=BATCH,
+                       fanouts=FANOUTS, mesh=host_mesh, seed=0)
+    pre = make_loader(backend, small_graph, batch_size=BATCH,
+                      fanouts=FANOUTS, mesh=host_mesh, seed=0, prefetch=2)
+    try:
+        assert isinstance(pre, PrefetchingLoader)
+        for i in range(3):
+            _assert_minibatch_identical(sync.get_batch(i), pre.get_batch(i),
+                                        msg=f"{backend} batch {i}")
+    finally:
+        sync.close()
+        pre.close()
+
+
+def test_prefetch_storage_trace_off_consumer_thread(small_graph):
+    """The simulated-storage cost-model re-sample + sleep must run in the
+    prefetch worker, not on the consumer's critical path."""
+    from repro.storage import make_engine
+    eng = make_engine("mmap", small_graph)
+    loader = make_loader("pallas", small_graph, batch_size=BATCH,
+                         fanouts=FANOUTS, storage_engine=eng, prefetch=2)
+    try:
+        loader.get_batch(0)                      # warm: compile + fill queue
+        deadline = time.time() + 10.0
+        while loader._queue.empty() and time.time() < deadline:
+            time.sleep(0.01)
+        t0 = time.perf_counter()
+        loader.get_batch(1)
+        dequeue_s = time.perf_counter() - t0
+        inner = loader.inner
+        assert inner.stats()["simulated_storage_s"] > 0.0
+        # batch 1 was fully produced (trace + sleep) before the consumer
+        # asked for it, so the dequeue is far cheaper than the imposed cost
+        assert dequeue_s < inner.simulated_storage_s / 2
+    finally:
+        loader.close()
+
+
+def test_train_loop_accounting_under_prefetch(small_graph, host_mesh, rules):
+    g = small_graph
+    gnn = GraphSAGE(GNNConfig(feat_dim=g.feat_dim, hidden=16,
+                              n_classes=int(g.labels.max()) + 1,
+                              fanouts=FANOUTS))
+    opt = adamw(3e-3)
+    loader = make_loader("host", g, batch_size=BATCH, fanouts=FANOUTS,
+                         mesh=host_mesh, prefetch=2)
+    try:
+        step = build_train_step(loader, gnn, opt, host_mesh, rules)
+        p = gnn.init(jax.random.key(0))
+        state = {"params": p, "opt": opt.init(p),
+                 "step": jnp.zeros((), jnp.int32)}
+        with host_mesh:
+            state, stats = train_loop(loader, step, state, steps=4)
+    finally:
+        loader.close()
+    assert stats.steps == 4
+    assert int(state["step"]) == 4
+    assert stats.busy_s > 0
+    assert 0.0 <= stats.idle_fraction <= 1.0
+    assert loader.stats()["prefetched"] == 4
+
+
+def test_prefetch_loss_trajectory_matches_synchronous(small_graph, host_mesh,
+                                                      rules):
+    """End-to-end determinism: same seeds, same batches, same losses."""
+    g = small_graph
+    gnn = GraphSAGE(GNNConfig(feat_dim=g.feat_dim, hidden=16,
+                              n_classes=int(g.labels.max()) + 1,
+                              fanouts=FANOUTS))
+    opt = adamw(3e-3)
+
+    def run(prefetch):
+        loader = make_loader("pallas", g, batch_size=BATCH, fanouts=FANOUTS,
+                             mesh=host_mesh, seed=0, prefetch=prefetch)
+        losses = []
+        try:
+            step = build_train_step(loader, gnn, opt, host_mesh, rules)
+            p = gnn.init(jax.random.key(0))
+            state = {"params": p, "opt": opt.init(p),
+                     "step": jnp.zeros((), jnp.int32)}
+            with host_mesh:
+                state, _ = train_loop(
+                    loader, step, state, steps=3,
+                    on_step=lambda i, s, m: losses.append(float(m["loss"])))
+        finally:
+            loader.close()
+        return losses
+
+    assert run(0) == run(2)
