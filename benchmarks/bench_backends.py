@@ -18,7 +18,18 @@ import sys
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="reddit")
+    ap.add_argument("--large-scale", action="store_true",
+                    help="Kronecker-expanded dataset variant")
     ap.add_argument("--backends", default="host,isp,pallas")
+    ap.add_argument("--graph-store", default="mem",
+                    help="comma list of graph stores to bench: mem and/or "
+                         "disk (disk rows — keyed 'backend@disk' — run the "
+                         "host backend through real paged reads; device "
+                         "backends are skipped, they hold device copies)")
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="disk-store page-cache budget in MB")
+    ap.add_argument("--cache-policy", default="lru",
+                    choices=("lru", "pinned"))
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--batch", type=int, default=32)
@@ -39,7 +50,7 @@ def main(argv=None):
     from repro.optim import adamw
 
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
-    g = load_dataset(args.dataset)
+    g = load_dataset(args.dataset, large_scale=args.large_scale)
     mesh = make_host_mesh()
     rules = ShardingRules.default()
     gnn = GraphSAGE(GNNConfig(feat_dim=g.feat_dim, hidden=args.hidden,
@@ -47,45 +58,75 @@ def main(argv=None):
                               fanouts=fanouts))
     opt = adamw(1e-3)
 
+    store_dir = None
+    store_kinds = args.graph_store.split(",")
+    unknown = set(store_kinds) - {"mem", "disk"}
+    if unknown:
+        ap.error(f"--graph-store: unknown kind(s) {sorted(unknown)}; "
+                 "have mem, disk")
+    if "disk" in store_kinds:
+        import atexit
+        import shutil
+        import tempfile
+        store_dir = tempfile.mkdtemp(prefix=f"graphstore-{args.dataset}-")
+        atexit.register(shutil.rmtree, store_dir, ignore_errors=True)
+
     results = {}
-    for backend in args.backends.split(","):
-        loader = make_loader(backend, g, batch_size=args.batch,
-                             fanouts=fanouts, mesh=mesh,
-                             prefetch=args.prefetch)
-        try:
-            step = build_train_step(loader, gnn, opt, mesh, rules)
-            p = gnn.init(jax.random.key(0))
-            state = {"params": p, "opt": opt.init(p),
-                     "step": jnp.zeros((), jnp.int32)}
-            with mesh:
-                # warmup covers jit compilation + pipeline fill
-                state, _ = train_loop(loader, step, state,
-                                      steps=args.warmup)
-                state, stats = train_loop(loader, step, state,
-                                          steps=args.warmup + args.steps,
-                                          start=args.warmup)
-        finally:
-            loader.close()
-        results[backend] = {
-            "steps_per_s": stats.steps_per_s,
-            "idle_fraction": stats.idle_fraction,
-            "idle_s": stats.idle_s,
-            "busy_s": stats.busy_s,
-            "loader_stats": loader.stats(),
-        }
-        print(f"bench_backends,{args.dataset},{backend},"
-              f"steps_per_s,{stats.steps_per_s:.4g}")
-        print(f"bench_backends,{args.dataset},{backend},"
-              f"idle_fraction,{stats.idle_fraction:.4g}")
+    for kind in store_kinds:
+        for backend in args.backends.split(","):
+            if kind == "disk" and backend != "host":
+                print(f"bench_backends: skipping {backend}@disk (device "
+                      "backends hold device-resident copies)")
+                continue
+            store = None
+            if kind == "disk":
+                from repro.storage import open_store
+                store = open_store("disk", g=g, path=store_dir,
+                                   cache_mb=args.cache_mb,
+                                   policy=args.cache_policy)
+            row = backend if kind == "mem" else f"{backend}@{kind}"
+            loader = make_loader(backend, g, batch_size=args.batch,
+                                 fanouts=fanouts, mesh=mesh,
+                                 prefetch=args.prefetch, store=store)
+            try:
+                step = build_train_step(loader, gnn, opt, mesh, rules)
+                p = gnn.init(jax.random.key(0))
+                state = {"params": p, "opt": opt.init(p),
+                         "step": jnp.zeros((), jnp.int32)}
+                with mesh:
+                    # warmup covers jit compilation + pipeline fill
+                    state, _ = train_loop(loader, step, state,
+                                          steps=args.warmup)
+                    state, stats = train_loop(loader, step, state,
+                                              steps=args.warmup + args.steps,
+                                              start=args.warmup)
+            finally:
+                loader.close()
+                if store is not None:
+                    store.close()
+            results[row] = {
+                "steps_per_s": stats.steps_per_s,
+                "idle_fraction": stats.idle_fraction,
+                "idle_s": stats.idle_s,
+                "busy_s": stats.busy_s,
+                "loader_stats": loader.stats(),
+            }
+            print(f"bench_backends,{args.dataset},{row},"
+                  f"steps_per_s,{stats.steps_per_s:.4g}")
+            print(f"bench_backends,{args.dataset},{row},"
+                  f"idle_fraction,{stats.idle_fraction:.4g}")
 
     payload = {
         "bench": "backends",
         "dataset": args.dataset,
+        "large_scale": args.large_scale,
         "steps": args.steps,
         "batch": args.batch,
         "fanouts": list(fanouts),
         "hidden": args.hidden,
         "prefetch": args.prefetch,
+        "graph_store": args.graph_store,
+        "cache_mb": args.cache_mb,
         "backend_default": jax.default_backend(),
         "platform": platform.platform(),
         "results": results,

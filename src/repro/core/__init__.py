@@ -1,7 +1,10 @@
 """SmartSAGE core: the paper's contribution as composable JAX modules.
 
-graph      — CSR graphs, R-MAT base + Kronecker fractal expansion (Table I)
-sampler    — GraphSAGE Algorithm 1 / GraphSAINT walks (+ access traces)
+graph      — CSR graphs, R-MAT base + Kronecker fractal expansion (Table I);
+             CSRGraph natively implements the GraphStore access protocol
+             (storage/store.py adds the out-of-core DiskStore)
+sampler    — GraphSAGE Algorithm 1 / GraphSAINT walks over any GraphStore
+             (+ access traces, with measured I/O over a DiskStore)
 gnn        — GraphSAGE aggregate/convolve backend (dense fixed-fanout)
 partition  — contiguous node-range partitioning for the mesh
 isp        — near-data sharded sampling/gather (the ISP architecture)

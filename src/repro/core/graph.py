@@ -17,6 +17,7 @@ structures onto the mesh as padded device arrays for near-data sampling.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -57,6 +58,39 @@ class CSRGraph:
     def neighbors(self, u: int) -> np.ndarray:
         return self.indices[self.indptr[u]:self.indptr[u + 1]]
 
+    # -- GraphStore data-access protocol (storage/store.py) ------------------
+    # CSRGraph is itself the in-memory implementation of the access methods
+    # the samplers/loaders go through; ``storage.store.InMemoryStore`` wraps
+    # it with the cache/IO-counter interface, ``DiskStore`` serves the same
+    # calls from a paged on-disk layout.
+
+    def out_degrees(self, nodes: np.ndarray) -> np.ndarray:
+        nodes = np.asarray(nodes, np.int64)
+        return (self.indptr[nodes + 1] - self.indptr[nodes]).astype(np.int64)
+
+    def gather_edges(self, rows: np.ndarray, offsets: np.ndarray
+                     ) -> np.ndarray:
+        """Neighbor IDs ``indices[indptr[rows] + offsets]`` with the
+        degree-0 self-loop fallback — (R,) rows x (R, f) offsets -> (R, f).
+        The sampler's only edge-array read path."""
+        rows = np.asarray(rows, np.int64)
+        off = np.asarray(offsets, np.int64)
+        if self.num_edges == 0:
+            return np.broadcast_to(rows[:, None].astype(np.int32),
+                                   off.shape).copy()
+        start = self.indptr[rows]
+        deg = self.indptr[rows + 1] - start
+        idx = start[:, None] + off
+        picked = self.indices[np.minimum(idx, self.num_edges - 1)]
+        return np.where(deg[:, None] > 0, picked,
+                        rows[:, None]).astype(np.int32)
+
+    def gather_features(self, ids: np.ndarray) -> np.ndarray:
+        return self.features[np.asarray(ids)]
+
+    def gather_labels(self, ids: np.ndarray) -> np.ndarray:
+        return self.labels[np.asarray(ids)]
+
     # -- storage-layout views (used by the storage simulator) ---------------
     def edge_list_nbytes(self, entry_bytes: int = 8) -> int:
         """Size of the neighbor edge-list array on storage (paper: 8 B/entry)."""
@@ -79,28 +113,34 @@ class CSRGraph:
             assert self.labels.shape[0] == self.num_nodes
 
 
-def _dedup_sort_edges(src: np.ndarray, dst: np.ndarray, n: int):
-    """Drop self-loops + duplicate edges; return sorted (src, dst)."""
+def _edge_keys(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:
+    """Self-loop-free unique edge keys ``src * n + dst`` (sorted int64)."""
     keep = src != dst
-    src, dst = src[keep], dst[keep]
-    key = src.astype(np.int64) * n + dst
-    key = np.unique(key)
-    return (key // n).astype(np.int64), (key % n).astype(np.int32)
+    key = src[keep].astype(np.int64) * n + dst[keep]
+    return np.unique(key)
+
+
+def _csr_from_keys(keys: np.ndarray, n: int, *, features=None, labels=None,
+                   name="graph") -> CSRGraph:
+    """Build a CSRGraph from sorted unique edge keys (``src * n + dst``)."""
+    src = (keys // n).astype(np.int64)
+    dst = (keys % n).astype(np.int32)
+    counts = np.bincount(src, minlength=n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    g = CSRGraph(indptr=indptr, indices=dst,
+                 features=features, labels=labels, name=name)
+    g.validate()
+    return g
 
 
 def edges_to_csr(src, dst, n: int, *, features=None, labels=None,
                  name="graph", symmetric: bool = True) -> CSRGraph:
     if symmetric:
         src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
-    src, dst = _dedup_sort_edges(np.asarray(src, np.int64),
-                                 np.asarray(dst, np.int64), n)
-    counts = np.bincount(src, minlength=n)
-    indptr = np.zeros(n + 1, np.int64)
-    np.cumsum(counts, out=indptr[1:])
-    g = CSRGraph(indptr=indptr, indices=dst.astype(np.int32),
-                 features=features, labels=labels, name=name)
-    g.validate()
-    return g
+    keys = _edge_keys(np.asarray(src, np.int64), np.asarray(dst, np.int64), n)
+    return _csr_from_keys(keys, n, features=features, labels=labels,
+                          name=name)
 
 
 def rmat_graph(n_nodes: int, n_edges: int, *, seed: int = 0,
@@ -122,7 +162,8 @@ def rmat_graph(n_nodes: int, n_edges: int, *, seed: int = 0,
 
 
 def kronecker_expand(g: CSRGraph, factor: int, *, seed: int = 0,
-                     edge_keep: float = 1.0, name: str | None = None
+                     edge_keep: float = 1.0, name: str | None = None,
+                     chunk_pairs: int = 4, spill_dir: str | None = None
                      ) -> CSRGraph:
     """Kronecker fractal expansion: G' = G (x) K_factor.
 
@@ -133,23 +174,59 @@ def kronecker_expand(g: CSRGraph, factor: int, *, seed: int = 0,
     densification power law the paper requires (higher average degree at
     larger scale; Fig. 13), and the degree distribution stays power-law
     since every base degree is multiplied by the same expansion factor.
+
+    Memory: replica pairs are generated in groups of ``chunk_pairs`` and
+    reduced to unique edge keys incrementally, so the peak is
+    O(unique_edges + chunk_pairs * base_edges) instead of the old
+    O(factor^2 * edge_keep * base_edges) all-pairs concatenate.  The RNG
+    stream is consumed pair-by-pair in a fixed order, so the result is
+    bit-identical for every ``chunk_pairs``/``spill_dir`` setting.  With
+    ``spill_dir`` set, per-chunk keys are spilled to ``.npy`` files and
+    merged one at a time afterwards (peak = unique_edges + one chunk) —
+    the disk-backed path that pairs with ``storage.store.DiskStore``.
     """
     rng = np.random.default_rng(seed)
     n2 = g.num_nodes * factor
     base_src = np.repeat(np.arange(g.num_nodes, dtype=np.int64),
                          g.degrees())
     base_dst = g.indices.astype(np.int64)
-    n_pairs = int(factor * factor * edge_keep)
-    srcs, dsts = [], []
-    for _ in range(max(1, n_pairs)):
+    n_pairs = max(1, int(factor * factor * edge_keep))
+    chunk_pairs = max(1, int(chunk_pairs))
+
+    spill_files: list[str] = []
+    keys: np.ndarray | None = None
+
+    def reduce_chunk(chunk: list[np.ndarray]) -> None:
+        nonlocal keys
+        chunk_keys = _edge_keys(np.concatenate([s for s, _ in chunk]),
+                                np.concatenate([d for _, d in chunk]), n2)
+        if spill_dir is not None:
+            path = os.path.join(spill_dir, f"kron-keys-{len(spill_files)}.npy")
+            np.save(path, chunk_keys)
+            spill_files.append(path)
+        elif keys is None:
+            keys = chunk_keys
+        else:
+            keys = np.union1d(keys, chunk_keys)
+
+    if spill_dir is not None:
+        os.makedirs(spill_dir, exist_ok=True)
+    pending: list[tuple[np.ndarray, np.ndarray]] = []
+    for _ in range(n_pairs):
         r1 = rng.integers(0, factor, size=base_src.shape[0])
         r2 = rng.integers(0, factor, size=base_src.shape[0])
-        srcs.append(base_src * factor + r1)
-        dsts.append(base_dst * factor + r2)
-    src = np.concatenate(srcs)
-    dst = np.concatenate(dsts)
-    return edges_to_csr(src, dst, n2, name=name or (g.name + f"-kron{factor}"),
-                        symmetric=False)
+        pending.append((base_src * factor + r1, base_dst * factor + r2))
+        if len(pending) >= chunk_pairs:
+            reduce_chunk(pending)
+            pending = []
+    if pending:
+        reduce_chunk(pending)
+    for path in spill_files:
+        chunk_keys = np.load(path)
+        keys = chunk_keys if keys is None else np.union1d(keys, chunk_keys)
+        os.remove(path)
+    return _csr_from_keys(keys, n2,
+                          name=name or (g.name + f"-kron{factor}"))
 
 
 def attach_features(g: CSRGraph, feat_dim: int, n_classes: int = 41,

@@ -9,9 +9,11 @@ benchmarks, and storage simulator compose with any of them.
 
 Backends (``make_loader(name, ...)``):
 
-* ``host``   — numpy ``sample_khop`` + feature indexing on the host graph,
-  wrapped in the ``ProducerConsumerPipeline`` for async production (the
-  paper's CPU data-preparation stage, Fig. 4).
+* ``host``   — numpy ``sample_khop`` + feature indexing through a
+  ``GraphStore`` (in-memory arrays, or real paged disk reads via
+  ``storage.store.DiskStore`` — the out-of-core path), wrapped in the
+  ``ProducerConsumerPipeline`` for async production (the paper's CPU
+  data-preparation stage, Fig. 4).
 * ``isp``    — the ``ISPGraph`` shard_map path: each mesh shard samples the
   targets it owns and only the dense subgraph crosses the links (the ISP
   architecture).
@@ -106,11 +108,18 @@ def register_loader(name: str):
     return deco
 
 
-def make_loader(name: str, g: CSRGraph, *, batch_size: int = 64,
+def make_loader(name: str, g: CSRGraph | None, *, batch_size: int = 64,
                 fanouts: Sequence[int] = DEFAULT_FANOUTS, mesh=None,
                 seed: int = 0, storage_engine=None, prefetch: int = 0,
-                **kw) -> "SubgraphLoader":
-    """Build a registered backend loader over ``g``.
+                store=None, **kw) -> "SubgraphLoader":
+    """Build a registered backend loader over ``g`` and/or a GraphStore.
+
+    ``store`` selects where the graph data is *read from*: None (default)
+    uses ``g``'s in-memory arrays; a ``storage.store.DiskStore`` makes the
+    host backend's sampling and feature gathers real paged disk reads
+    through its page cache (the out-of-core data plane).  The device
+    backends (isp/pallas) hold device-resident copies, so they
+    materialize from the store only when ``g`` is not given.
 
     ``prefetch > 0`` wraps the loader in a ``PrefetchingLoader`` of that
     queue depth: a background worker produces batch ``i+1`` (device
@@ -120,18 +129,22 @@ def make_loader(name: str, g: CSRGraph, *, batch_size: int = 64,
     """
     if name not in LOADERS:
         raise KeyError(f"unknown backend {name!r}; have {sorted(LOADERS)}")
+    if g is None and store is not None and name != "host":
+        g = store.to_csr()
     loader = LOADERS[name](g, batch_size=batch_size, fanouts=tuple(fanouts),
                            mesh=mesh, seed=seed,
-                           storage_engine=storage_engine, **kw)
+                           storage_engine=storage_engine, store=store, **kw)
     if prefetch:
         from repro.core.pipeline import PrefetchingLoader
         loader = PrefetchingLoader(loader, depth=prefetch)
     return loader
 
 
-def batch_targets(g: CSRGraph, idx: int, batch_size: int,
+def batch_targets(g, idx: int, batch_size: int,
                   seed: int = 0) -> np.ndarray:
-    """The shared per-batch target stream (pure function of the index)."""
+    """The shared per-batch target stream (pure function of the index).
+    ``g`` is anything with ``num_nodes`` — a CSRGraph or a GraphStore —
+    so mem- and disk-backed runs draw identical targets."""
     rng = np.random.default_rng(seed + idx)
     return rng.integers(0, g.num_nodes, batch_size).astype(np.int32)
 
@@ -141,9 +154,12 @@ class _LoaderBase:
 
     backend = "base"
 
-    def __init__(self, g: CSRGraph, *, batch_size: int, fanouts,
-                 seed: int = 0, storage_engine=None):
+    def __init__(self, g: CSRGraph | None, *, batch_size: int, fanouts,
+                 seed: int = 0, storage_engine=None, store=None):
         self.g = g
+        self.store = store if store is not None else g
+        if self.store is None:
+            raise ValueError("loader needs a graph or a GraphStore")
         self.batch_size = batch_size
         self.fanouts = tuple(fanouts)
         self.seed = seed
@@ -152,7 +168,7 @@ class _LoaderBase:
         self._storage_lock = threading.Lock()
 
     def targets(self, idx: int) -> np.ndarray:
-        return batch_targets(self.g, idx, self.batch_size, self.seed)
+        return batch_targets(self.store, idx, self.batch_size, self.seed)
 
     def storage_delay(self, trace: SampleTrace) -> float:
         """Replay ``trace`` against the attached engine's cost model and
@@ -172,7 +188,8 @@ class _LoaderBase:
         """The cost-model access trace for device backends, which have no
         host trace: a numpy re-sample with the same algorithmic event
         counts (host RNG stream)."""
-        return sample_khop(self.g, self.targets(idx), self.fanouts,
+        g = self.g if self.g is not None else self.store
+        return sample_khop(g, self.targets(idx), self.fanouts,
                            seed=self.seed + idx)
 
     def impose_storage_cost(self, idx: int) -> None:
@@ -190,8 +207,12 @@ class _LoaderBase:
         time.sleep(max(0.0, delay - (time.perf_counter() - t0)))
 
     def stats(self) -> dict:
-        return {"backend": self.backend,
-                "simulated_storage_s": self.simulated_storage_s}
+        s = {"backend": self.backend,
+             "simulated_storage_s": self.simulated_storage_s}
+        store_stats = getattr(self.store, "stats", None)
+        if store_stats is not None:
+            s["store"] = store_stats()
+        return s
 
     def close(self) -> None:
         pass
@@ -204,18 +225,23 @@ class _LoaderBase:
 @register_loader("host")
 class HostSubgraphLoader(_LoaderBase):
     """CPU data preparation (paper Fig. 4): ``sample_khop`` + feature
-    indexing in producer threads, consumed strictly in batch order.  The
-    storage engine's per-trace cost is imposed inside ``produce`` so the
-    pipeline's idle-fraction metric reflects the simulated tier."""
+    indexing in producer threads, consumed strictly in batch order.  All
+    graph reads go through ``self.store`` — in-memory arrays by default,
+    real paged disk reads when a ``DiskStore`` is attached (the
+    out-of-core path).  The storage engine's per-trace cost is imposed
+    inside ``produce`` so the pipeline's idle-fraction metric reflects
+    the simulated tier."""
 
     def __init__(self, g, *, batch_size, fanouts, mesh=None, seed=0,
-                 storage_engine=None, n_workers: int = 4,
+                 storage_engine=None, store=None, n_workers: int = 4,
                  queue_depth: int = 8, straggler_factor: float = 4.0):
         super().__init__(g, batch_size=batch_size, fanouts=fanouts,
-                         seed=seed, storage_engine=storage_engine)
+                         seed=seed, storage_engine=storage_engine,
+                         store=store)
         from repro.core.pipeline import (ProducerConsumerPipeline,
                                          make_host_producer)
-        produce = make_host_producer(g, batch_size, self.fanouts, seed=seed,
+        produce = make_host_producer(self.store, batch_size, self.fanouts,
+                                     seed=seed,
                                      storage_cost_fn=self.storage_delay)
         self.pipeline = ProducerConsumerPipeline(
             produce, n_workers=n_workers, queue_depth=queue_depth,
@@ -247,9 +273,10 @@ class ISPSubgraphLoader(_LoaderBase):
     dense subgraph crosses the links."""
 
     def __init__(self, g, *, batch_size, fanouts, mesh=None, seed=0,
-                 storage_engine=None, axis: str = "data"):
+                 storage_engine=None, store=None, axis: str = "data"):
         super().__init__(g, batch_size=batch_size, fanouts=fanouts,
-                         seed=seed, storage_engine=storage_engine)
+                         seed=seed, storage_engine=storage_engine,
+                         store=store)
         import jax
         import jax.numpy as jnp
         from repro.core.isp import ISPGraph
@@ -297,9 +324,10 @@ class PallasSubgraphLoader(_LoaderBase):
     the TPU memory hierarchy, feeding real training."""
 
     def __init__(self, g, *, batch_size, fanouts, mesh=None, seed=0,
-                 storage_engine=None):
+                 storage_engine=None, store=None):
         super().__init__(g, batch_size=batch_size, fanouts=fanouts,
-                         seed=seed, storage_engine=storage_engine)
+                         seed=seed, storage_engine=storage_engine,
+                         store=store)
         import jax
         import jax.numpy as jnp
         from repro.kernels import ops

@@ -25,9 +25,9 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.graph import CSRGraph
 from repro.core.loader import Minibatch, batch_targets
-from repro.core.sampler import DEFAULT_FANOUTS, sample_khop
+from repro.core.sampler import (DEFAULT_FANOUTS, _io_delta, _io_snapshot,
+                                sample_khop)
 
 
 @dataclasses.dataclass
@@ -45,10 +45,15 @@ class PipelineStats:
         return self.consumer_idle_s / total if total > 0 else 0.0
 
 
-def make_host_producer(g: CSRGraph, batch_size: int, fanouts=DEFAULT_FANOUTS,
+def make_host_producer(store, batch_size: int, fanouts=DEFAULT_FANOUTS,
                        *, seed: int = 0,
                        storage_cost_fn=None) -> Callable[[int], Minibatch]:
     """Returns produce(batch_idx) -> ``Minibatch`` of numpy arrays.
+
+    ``store`` is any GraphStore — a ``CSRGraph`` (in-memory arrays), an
+    ``InMemoryStore``, or a ``DiskStore``, in which case sampling *and*
+    the feature/label gathers are real paged disk reads and the batch's
+    trace carries the measured block-I/O counters for the whole span.
 
     ``storage_cost_fn(trace) -> seconds`` (optional) models the storage
     tier serving the batch's access trace; the producer sleeps that long,
@@ -57,12 +62,17 @@ def make_host_producer(g: CSRGraph, batch_size: int, fanouts=DEFAULT_FANOUTS,
     """
 
     def produce(batch_idx: int) -> Minibatch:
-        targets = batch_targets(g, batch_idx, batch_size, seed)
-        trace = sample_khop(g, targets, fanouts, seed=seed + batch_idx)
+        targets = batch_targets(store, batch_idx, batch_size, seed)
+        io0 = _io_snapshot(store)
+        trace = sample_khop(store, targets, fanouts, seed=seed + batch_idx)
+        hop_feats = [store.gather_features(h) for h in trace.hops]
+        labels = store.gather_labels(targets)
+        # widen the sampler's measured span to cover the feature and label
+        # gathers too; the thread-scoped counters make the per-batch delta
+        # exact (one batch = one producer thread)
+        trace.io = _io_delta(store, io0)
         if storage_cost_fn is not None:
             time.sleep(storage_cost_fn(trace))
-        hop_feats = [g.features[h] for h in trace.hops]
-        labels = g.labels[targets]
         return Minibatch(targets=targets, hop_ids=list(trace.hops),
                          hop_feats=hop_feats, labels=labels, trace=trace)
 

@@ -3,11 +3,16 @@
 Two synchronized implementations:
 
 * **numpy host samplers** (`sample_khop`, `saint_random_walk`): the
-  reference algorithm.  They also emit the *access trace* — which nodes'
-  neighbor lists were touched, in order — which is exactly the request
-  stream the storage simulator replays against the mmap / direct-I/O / ISP
-  device models.  One trace, many device models: the algorithmic event
-  counts are real, only time-per-event uses device constants.
+  reference algorithm.  They sample *through the GraphStore access
+  protocol* (``out_degrees`` / ``gather_edges`` — implemented natively by
+  ``CSRGraph`` and out-of-core by ``storage.store.DiskStore``), and emit
+  the *access trace* — which nodes' neighbor lists were touched, in order
+  — which is exactly the request stream the storage simulator replays
+  against the mmap / direct-I/O / ISP device models.  Over a ``DiskStore``
+  the trace additionally records the **measured** block I/O the store
+  actually issued (``SampleTrace.io``): real page-cache hits/misses, not
+  a replay.  One trace, many device models: the algorithmic event counts
+  are real, only time-per-event uses device constants.
 
 * **JAX samplers** (`sample_khop_jax`): the same math as fixed-shape XLA
   ops (uniform-with-replacement fanout sampling), used on-mesh by the
@@ -27,8 +32,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import CSRGraph
-
 DEFAULT_FANOUTS = (25, 10)   # paper default: 25 then 10 per layer
 
 
@@ -45,36 +48,64 @@ class SampleTrace:
     touched_nodes: np.ndarray
     hops: list[np.ndarray]
     subgraph_nodes: np.ndarray
+    io: dict | None = None       # measured block-I/O counters (DiskStore)
 
     def sampled_ids_nbytes(self, entry_bytes: int = 8) -> int:
         return sum(h.size for h in self.hops) * entry_bytes
 
 
-def _sample_one_hop(g: CSRGraph, frontier: np.ndarray, fanout: int,
+def _io_fn(store):
+    """The store's I/O-counter view, preferring the thread-scoped one: a
+    batch is sampled on one thread, so per-thread deltas attribute its
+    I/O exactly even with concurrent producer workers."""
+    return getattr(store, "thread_io_counters",
+                   getattr(store, "io_counters", None))
+
+
+def _io_snapshot(store) -> dict | None:
+    counters = _io_fn(store)
+    return counters() if counters is not None else None
+
+
+def _io_delta(store, before: dict | None) -> dict | None:
+    if before is None:
+        return None
+    after = _io_fn(store)()
+    return {k: after[k] - before.get(k, 0) for k in after}
+
+
+def _sample_one_hop(store, frontier: np.ndarray, fanout: int,
                     rng: np.random.Generator) -> np.ndarray:
-    """frontier: (..., ) -> (...,fanout) sampled neighbor ids (w/ replacement)."""
+    """frontier: (..., ) -> (...,fanout) sampled neighbor ids (w/ replacement).
+
+    ``store`` is anything implementing the GraphStore access protocol —
+    a ``CSRGraph`` (in-memory arrays) or a ``DiskStore`` (paged reads of
+    the on-disk edge-list array).  The RNG draw is identical either way,
+    so mem- and disk-backed sampling are bit-identical at equal seeds.
+    """
     flat = frontier.reshape(-1)
-    deg = (g.indptr[flat + 1] - g.indptr[flat]).astype(np.int64)
+    deg = store.out_degrees(flat)
     r = rng.integers(0, np.maximum(deg, 1)[:, None],
                      size=(flat.size, fanout))
-    idx = g.indptr[flat][:, None] + r
-    picked = g.indices[np.minimum(idx, g.num_edges - 1)]
-    picked = np.where(deg[:, None] > 0, picked, flat[:, None])  # self-loop fb
+    picked = store.gather_edges(flat, r)        # self-loop fb for deg 0
     return picked.reshape(frontier.shape + (fanout,)).astype(np.int32)
 
 
-def sample_khop(g: CSRGraph, targets: np.ndarray,
+def sample_khop(store, targets: np.ndarray,
                 fanouts=DEFAULT_FANOUTS, *, seed: int = 0) -> SampleTrace:
-    """GraphSAGE Algorithm 1, k hops.  hops[0]=targets (M,), hops[1]=(M,f1),
-    hops[2]=(M,f1,f2), ...  Every frontier node's neighbor list is one
-    storage request (the paper's per-target edge-list "chunk" fetch)."""
+    """GraphSAGE Algorithm 1, k hops over any GraphStore.  hops[0]=targets
+    (M,), hops[1]=(M,f1), hops[2]=(M,f1,f2), ...  Every frontier node's
+    neighbor list is one storage request (the paper's per-target edge-list
+    "chunk" fetch) — over a ``DiskStore`` these are *actual* paged reads
+    and the trace's ``io`` field records the block requests issued."""
     rng = np.random.default_rng(seed)
     targets = np.asarray(targets, np.int32)
+    io0 = _io_snapshot(store)
     hops = [targets]
     touched = [targets.reshape(-1)]
     frontier = targets
     for i, f in enumerate(fanouts):
-        nxt = _sample_one_hop(g, frontier, f, rng)
+        nxt = _sample_one_hop(store, frontier, f, rng)
         hops.append(nxt)
         frontier = nxt
         # every hop except the last is expanded again, so its neighbor
@@ -85,27 +116,29 @@ def sample_khop(g: CSRGraph, targets: np.ndarray,
     touched_nodes = np.concatenate(touched)
     subgraph = np.unique(np.concatenate([h.reshape(-1) for h in hops]))
     return SampleTrace(touched_nodes=touched_nodes, hops=hops,
-                       subgraph_nodes=subgraph)
+                       subgraph_nodes=subgraph, io=_io_delta(store, io0))
 
 
-def saint_random_walk(g: CSRGraph, roots: np.ndarray, walk_length: int = 4,
+def saint_random_walk(store, roots: np.ndarray, walk_length: int = 4,
                       *, seed: int = 0) -> SampleTrace:
     """GraphSAINT random-walk sampler: a length-L walk from each root; the
     union of visited nodes is the training subgraph.  Regular one-neighbor-
     per-step access pattern (paper §VI-F)."""
     rng = np.random.default_rng(seed)
     roots = np.asarray(roots, np.int32)
+    io0 = _io_snapshot(store)
     cur = roots.copy()
     visited = [roots]
     touched = []
     for _ in range(walk_length):
         touched.append(cur.reshape(-1))
-        cur = _sample_one_hop(g, cur, 1, rng)[..., 0]
+        cur = _sample_one_hop(store, cur, 1, rng)[..., 0]
         visited.append(cur)
     walk = np.stack(visited, axis=1)                       # (M, L+1)
     subgraph = np.unique(walk.reshape(-1))
     return SampleTrace(touched_nodes=np.concatenate(touched),
-                       hops=[roots, walk], subgraph_nodes=subgraph)
+                       hops=[roots, walk], subgraph_nodes=subgraph,
+                       io=_io_delta(store, io0))
 
 
 # ---------------------------------------------------------------------------

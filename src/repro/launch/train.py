@@ -39,6 +39,23 @@ def _parse():
                     help="async prefetch queue depth (0 = synchronous; "
                          "2 = double buffering): overlap data preparation "
                          "with training")
+    ap.add_argument("--graph-store", default="mem", choices=("mem", "disk"),
+                    help="where the graph data lives: 'mem' = DRAM arrays, "
+                         "'disk' = out-of-core DiskStore (block-aligned "
+                         "on-disk layout + live page cache; host backend "
+                         "samples/gathers through real paged reads)")
+    ap.add_argument("--cache-mb", type=float, default=None,
+                    help="disk-store page-cache budget in MB (default: "
+                         "storage spec; set below the on-disk footprint "
+                         "to exercise the beyond-DRAM working set)")
+    ap.add_argument("--cache-policy", default="lru",
+                    choices=("lru", "pinned"),
+                    help="disk-store placement: OS-page-cache-style LRU "
+                         "or §IV-C hot-block pinning + LRU spill")
+    ap.add_argument("--store-dir", default=None,
+                    help="directory for the on-disk graph layout "
+                         "(default: a fresh temp dir; reused if it "
+                         "already holds a manifest)")
     ap.add_argument("--dataset", default="reddit")
     ap.add_argument("--large-scale", action="store_true")
     ap.add_argument("--steps", type=int, default=50)
@@ -97,13 +114,36 @@ def run_gnn(args, mesh):
 
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     g = load_dataset(args.dataset, large_scale=args.large_scale)
+    store = None
+    store_tmpdir = None
+    if args.graph_store == "disk" and args.backend != "host":
+        print("[train] note: --graph-store disk applies to the host "
+              "backend only (device backends keep device-resident "
+              "copies); proceeding in-memory")
+    elif args.graph_store == "disk":
+        import tempfile
+
+        from repro.storage import open_store
+        store_dir = args.store_dir or tempfile.mkdtemp(
+            prefix=f"graphstore-{args.dataset}-")
+        if args.store_dir is None:
+            store_tmpdir = store_dir       # ours to remove at exit
+        store = open_store("disk", g=g, path=store_dir,
+                           cache_mb=args.cache_mb,
+                           policy=args.cache_policy)
+        print(f"[train] graph store: disk at {store_dir} "
+              f"({store.nbytes_on_disk() / 2**20:.1f} MB on disk, "
+              f"page cache {store.cache_blocks} x {store.block_bytes} B "
+              f"= {store.cache_blocks * store.block_bytes / 2**20:.1f} MB, "
+              f"policy={store.policy})")
     engine = None
     if args.storage_engine and args.storage_engine != "none":
         from repro.storage import make_engine
-        engine = make_engine(args.storage_engine, g)
+        engine = make_engine(args.storage_engine, g,
+                             measured=store is not None, store=store)
     loader = make_loader(args.backend, g, batch_size=args.batch,
                          fanouts=fanouts, mesh=mesh, storage_engine=engine,
-                         prefetch=args.prefetch)
+                         prefetch=args.prefetch, store=store)
     print(f"[train] {g.name}: {g.num_nodes} nodes {g.num_edges} edges, "
           f"backend={args.backend}"
           + (f", storage={args.storage_engine}" if engine else "")
@@ -138,18 +178,36 @@ def run_gnn(args, mesh):
             saver.save_async(i + 1, state)
 
     try:
-        with mesh:
-            state, stats = train_loop(loader, step_fn, state,
-                                      steps=args.steps, start=start,
-                                      on_step=on_step)
+        try:
+            with mesh:
+                state, stats = train_loop(loader, step_fn, state,
+                                          steps=args.steps, start=start,
+                                          on_step=on_step)
+        finally:
+            loader.close()
+        if saver:
+            saver.save_async(args.steps, state)
+            saver.wait()
+        print(f"[train] {stats.steps} steps in {stats.wall_s:.1f}s "
+              f"({stats.steps_per_s:.2f} steps/s, consumer idle "
+              f"{stats.idle_fraction:.1%}) loader={loader.stats()}")
+        if store is not None:
+            io = store.io_counters()
+            print(f"[train] disk-store I/O: {io['requests']} requests, "
+                  f"{io['block_fetches']} block fetches "
+                  f"({io['bytes_fetched'] / 2**20:.1f} MB from disk), "
+                  f"cache hits={io['hits']} misses={io['misses']} "
+                  f"evictions={io['evictions']}")
+            if engine is not None and hasattr(engine, "report"):
+                print(f"[train] measured-vs-simulated: {engine.report()}")
     finally:
-        loader.close()
-    if saver:
-        saver.save_async(args.steps, state)
-        saver.wait()
-    print(f"[train] {stats.steps} steps in {stats.wall_s:.1f}s "
-          f"({stats.steps_per_s:.2f} steps/s, consumer idle "
-          f"{stats.idle_fraction:.1%}) loader={loader.stats()}")
+        # a failed or interrupted run must not leak fds or the (possibly
+        # multi-GB) temp copy of the graph
+        if store is not None:
+            store.close()
+        if store_tmpdir is not None:
+            import shutil
+            shutil.rmtree(store_tmpdir, ignore_errors=True)
 
 
 def run_lm(args, mesh):

@@ -1,5 +1,6 @@
-"""Storage-tier simulator: replays real sampler traces against device
-models of the paper's six design points (DESIGN.md §2)."""
+"""Storage tier: the live out-of-core GraphStore (``store``) plus the
+simulator that replays real sampler traces against device models of the
+paper's six design points (DESIGN.md §2)."""
 
 from repro.storage.blockdev import (EDGE_ENTRY_BYTES, BlockTrace, LRUCache,
                                     PinnedCache, block_trace)
@@ -8,7 +9,9 @@ from repro.storage.e2e import (E2EResult, capacity_report, e2e_train,
                                gpu_step_time)
 from repro.storage.engines import (ENGINES, BatchCost, DirectIOEngine,
                                    DRAMEngine, FPGACSDEngine, ISPEngine,
-                                   ISPOracleEngine, MmapSSDEngine,
-                                   PMEMEngine, StorageEngine, make_engine,
-                                   throughput)
+                                   ISPOracleEngine, MeasuredEngine,
+                                   MmapSSDEngine, PMEMEngine, StorageEngine,
+                                   make_engine, throughput)
 from repro.storage.specs import DEFAULT, SystemSpec
+from repro.storage.store import (DiskStore, GraphStore, InMemoryStore,
+                                 open_store, save_graph)

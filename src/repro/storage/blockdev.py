@@ -62,27 +62,64 @@ def block_trace(g: CSRGraph, touched_nodes: np.ndarray,
 
 
 class LRUCache:
-    """O(1) LRU over block IDs (the OS page cache model)."""
+    """O(1) LRU over block IDs (the OS page cache model).
+
+    Doubles as a *live* page cache: ``get``/``put`` carry block payloads
+    (the bytes a paged reader fetched from disk), so the same recency
+    policy that the trace-replay engines model also serves real reads in
+    ``storage.store.DiskStore``.  Hit/miss/eviction counters cover both
+    uses.
+    """
 
     def __init__(self, capacity_blocks: int):
         from collections import OrderedDict
         self.capacity = max(1, int(capacity_blocks))
         self._od = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
 
     def access(self, block: int) -> bool:
-        """Touch a block; returns True on hit."""
+        """Touch a block (payload-less, trace-replay use); True on hit."""
         od = self._od
         if block in od:
             od.move_to_end(block)
+            self.hits += 1
             return True
+        self.misses += 1
         od[block] = None
         if len(od) > self.capacity:
             od.popitem(last=False)
+            self.evictions += 1
         return False
 
     def access_run(self, first: int, n: int) -> int:
         """Touch blocks [first, first+n); returns number of misses."""
         return sum(0 if self.access(first + i) else 1 for i in range(n))
+
+    # -- live-cache path (payload-carrying) ---------------------------------
+    def get(self, block: int):
+        """Payload for ``block`` or None on miss (counts either way)."""
+        od = self._od
+        if block in od:
+            od.move_to_end(block)
+            self.hits += 1
+            return od[block]
+        self.misses += 1
+        return None
+
+    def put(self, block: int, payload) -> None:
+        """Insert a fetched block's payload, evicting the LRU block."""
+        od = self._od
+        od[block] = payload
+        od.move_to_end(block)
+        if len(od) > self.capacity:
+            od.popitem(last=False)
+            self.evictions += 1
+
+    def counters(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
 
 
 class PinnedCache:
@@ -96,25 +133,66 @@ class PinnedCache:
     placement and no kernel maintenance costs.
     """
 
-    def __init__(self, g: CSRGraph, capacity_blocks: int,
-                 block_bytes: int = 4096):
+    def __init__(self, g, capacity_blocks: int, block_bytes: int = 4096,
+                 entry_bytes: int = EDGE_ENTRY_BYTES):
+        """``g`` needs ``degrees()`` and ``edge_byte_range(u, entry_bytes)``
+        — a ``CSRGraph`` or any store exposing the same index (the live
+        ``DiskStore`` passes a view over its in-memory ``indptr``)."""
         capacity_blocks = max(2, int(capacity_blocks))
         heat_order = np.argsort(-g.degrees())
-        pinned: set[int] = set()
+        pinned: dict[int, object] = {}
         budget = capacity_blocks // 2
         for u in heat_order:
-            lo, hi = g.edge_byte_range(int(u), EDGE_ENTRY_BYTES)
+            lo, hi = g.edge_byte_range(int(u), entry_bytes)
             blocks = range(lo // block_bytes, max(hi - 1, lo) // block_bytes + 1)
             if len(pinned) + len(blocks) > budget:
                 break
-            pinned.update(blocks)
+            pinned.update((b, None) for b in blocks)
         self._pinned = pinned
         self._lru = LRUCache(capacity_blocks - len(pinned))
+        self._pinned_hits = 0
 
     def access(self, block: int) -> bool:
         if block in self._pinned:
+            self._pinned_hits += 1
             return True
         return self._lru.access(block)
 
     def access_run(self, first: int, n: int) -> int:
         return sum(0 if self.access(first + i) else 1 for i in range(n))
+
+    # -- live-cache path (payload-carrying) ---------------------------------
+    def get(self, block: int):
+        """Payload for ``block`` or None on miss.  A pinned block whose
+        payload has not been loaded yet counts as a miss exactly once (the
+        caller fetches and ``put``s it; it is never evicted after that)."""
+        if block in self._pinned:
+            payload = self._pinned[block]
+            if payload is not None:
+                self._pinned_hits += 1
+                return payload
+            self._lru.misses += 1
+            return None
+        return self._lru.get(block)
+
+    def put(self, block: int, payload) -> None:
+        if block in self._pinned:
+            self._pinned[block] = payload
+        else:
+            self._lru.put(block, payload)
+
+    @property
+    def hits(self) -> int:
+        return self._pinned_hits + self._lru.hits
+
+    @property
+    def misses(self) -> int:
+        return self._lru.misses
+
+    @property
+    def evictions(self) -> int:
+        return self._lru.evictions
+
+    def counters(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}

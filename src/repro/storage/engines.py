@@ -16,11 +16,16 @@ Engines:
   isp         — SmartSAGE(HW/SW): firmware ISP + NS_config coalescing (§IV-B)
   isp_oracle  — SmartSAGE(oracle): dedicated ISP cores (Newport-class)
   fpga        — FPGA-based CSD: two-step P2P per chunk (Fig. 9/19)
+
+``make_engine(..., measured=True)`` additionally reports the *real* I/O
+counters a live ``storage.store.DiskStore`` issued per batch
+(``SampleTrace.io``) alongside the simulated cost — see ``MeasuredEngine``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -317,6 +322,51 @@ class FPGACSDEngine(StorageEngine):
             meta={"raw_bytes": raw_bytes})
 
 
+class MeasuredEngine(StorageEngine):
+    """``measured`` mode: pair a simulated engine with the *real* I/O the
+    live ``storage.store.DiskStore`` issued for each batch.
+
+    The wrapped engine's cost model is untouched; every ``BatchCost``
+    additionally carries ``meta['measured']`` — the block requests, page
+    fetches, bytes read, and live-cache hits/misses/evictions recorded in
+    the trace by the store-backed sampler (``SampleTrace.io``) — and the
+    wrapper accumulates run totals, so simulated time-per-event and
+    measured event counts can be reported side by side.
+    """
+
+    def __init__(self, inner: StorageEngine, store=None):
+        super().__init__(inner.g, inner.spec)
+        self.inner = inner
+        self.store = store
+        self.name = f"measured:{inner.name}"
+        self.totals: dict[str, int] = {}
+        self.batches = 0
+        self._lock = threading.Lock()   # host producers cost concurrently
+
+    def batch_cost(self, trace: SampleTrace) -> BatchCost:
+        cost = self.inner.batch_cost(trace)
+        measured = getattr(trace, "io", None)
+        if measured is not None:
+            cost.meta["measured"] = dict(measured)
+            with self._lock:
+                for k, v in measured.items():
+                    self.totals[k] = self.totals.get(k, 0) + v
+                self.batches += 1
+        return cost
+
+    def feature_time(self, trace: SampleTrace) -> float:
+        return self.inner.feature_time(trace)
+
+    def report(self) -> dict:
+        """Accumulated measured counters (plus the store's cumulative view
+        when one is attached — exact even under concurrent producers)."""
+        out = {"engine": self.name, "batches": self.batches,
+               "measured_totals": dict(self.totals)}
+        if self.store is not None:
+            out["store"] = self.store.stats()
+        return out
+
+
 ENGINES = {
     "dram": DRAMEngine, "pmem": PMEMEngine, "mmap": MmapSSDEngine,
     "directio": DirectIOEngine, "isp": ISPEngine,
@@ -324,6 +374,12 @@ ENGINES = {
 }
 
 
-def make_engine(name: str, g: CSRGraph, spec: SystemSpec = DEFAULT,
-                **kw) -> StorageEngine:
-    return ENGINES[name](g, spec, **kw)
+def make_engine(name: str, g: CSRGraph, spec: SystemSpec = DEFAULT, *,
+                measured: bool = False, store=None, **kw) -> StorageEngine:
+    """Build a storage engine; ``measured=True`` wraps it in
+    ``MeasuredEngine`` so real I/O counters from a live ``DiskStore``
+    ride along with the simulated cost model."""
+    eng = ENGINES[name](g, spec, **kw)
+    if measured:
+        eng = MeasuredEngine(eng, store=store)
+    return eng

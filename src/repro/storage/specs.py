@@ -77,12 +77,25 @@ class PMEMSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class DiskStoreSpec:
+    """Defaults for the *live* out-of-core ``storage.store.DiskStore`` (as
+    opposed to the simulated engines above): the on-disk layout is
+    block-aligned at ``block_bytes`` and reads go through a page cache of
+    ``cache_mb`` under the ``policy`` placement rule ('lru' = OS-page-cache
+    style recency, 'pinned' = §IV-C hot-block pinning + LRU spill)."""
+    block_bytes: int = 4096
+    cache_mb: float = 16.0
+    policy: str = "lru"
+
+
+@dataclasses.dataclass(frozen=True)
 class SystemSpec:
     host: HostSpec = HostSpec()
     ssd: SSDSpec = SSDSpec()
     isp: ISPSpec = ISPSpec()
     fpga: FPGASpec = FPGASpec()
     pmem: PMEMSpec = PMEMSpec()
+    diskstore: DiskStoreSpec = DiskStoreSpec()
     dram_capacity: int = 192 << 30  # paper host DRAM
     # fraction of the edge-list array that fits in the OS page cache /
     # user scratchpad for LARGE-scale datasets (paper: working set >> DRAM;

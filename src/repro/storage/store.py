@@ -1,0 +1,503 @@
+"""GraphStore — the graph layer behind the unified data plane.
+
+The paper's central claim (§III) is that GNN training can exceed DRAM
+capacity by leaving the edge-list array and feature table on storage.
+This module makes that real instead of simulated: a ``GraphStore``
+protocol with two implementations,
+
+* ``InMemoryStore``  — wraps today's ``CSRGraph`` (everything in DRAM);
+* ``DiskStore``      — serves the same reads from a paged on-disk layout
+  (one 4 KB-block-aligned binary file per array + a JSON manifest,
+  written by ``save_graph``) through ``os.pread`` fronted by a *live*
+  page cache reusing the ``LRUCache``/``PinnedCache`` policies from
+  ``storage.blockdev`` — the same policies the trace-replay engines
+  model, now with real payloads and hit/miss/eviction counters.
+
+Only the (N+1)-entry ``indptr`` index stays resident (it is the CSR
+row index — a few MB even at billion-edge scale); ``indices``,
+``features`` and ``labels`` are read on demand in ``block_bytes`` units.
+The samplers (``core.sampler``) and the host loader (``core.loader``)
+issue every edge/feature/label read through the store's access methods,
+so a ``SampleTrace`` produced over a ``DiskStore`` carries the *actual*
+block-I/O counters of its batch (``SampleTrace.io``), and training with
+``--graph-store disk --cache-mb B`` runs the paper's headline scenario —
+a working set larger than the cache — end to end.
+
+``CSRGraph`` itself implements the data-access half of the protocol
+(``out_degrees`` / ``gather_edges`` / ``gather_features`` /
+``gather_labels``), so existing call sites keep working unchanged;
+the store classes add the IO-counter/stats half.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.graph import CSRGraph
+from repro.storage.blockdev import LRUCache, PinnedCache
+from repro.storage.specs import DEFAULT, SystemSpec
+
+MANIFEST = "manifest.json"
+FORMAT = "smartsage-graphstore"
+# one logical block-ID namespace per backing file, so a single cache
+# budget (and a single pinning policy) spans all arrays
+_NS_STRIDE = 1 << 40
+_ARRAY_ORDER = ("indptr", "indices", "features", "labels")
+
+
+@runtime_checkable
+class GraphStore(Protocol):
+    """Everything the data plane needs from a graph, wherever it lives."""
+
+    name: str
+
+    @property
+    def num_nodes(self) -> int: ...
+
+    @property
+    def num_edges(self) -> int: ...
+
+    @property
+    def feat_dim(self) -> int: ...
+
+    def degrees(self) -> np.ndarray: ...
+
+    def out_degrees(self, nodes: np.ndarray) -> np.ndarray: ...
+
+    def neighbors(self, u: int) -> np.ndarray: ...
+
+    def gather_edges(self, rows, offsets) -> np.ndarray: ...
+
+    def gather_features(self, ids) -> np.ndarray: ...
+
+    def gather_labels(self, ids) -> np.ndarray: ...
+
+    def io_counters(self) -> dict: ...
+
+    def stats(self) -> dict: ...
+
+    def to_csr(self) -> CSRGraph: ...
+
+    def close(self) -> None: ...
+
+
+class InMemoryStore:
+    """``GraphStore`` over a DRAM-resident ``CSRGraph`` (the baseline the
+    paper's in-memory design point assumes).  Pure delegation; all IO
+    counters stay zero — nothing ever leaves memory."""
+
+    kind = "mem"
+
+    def __init__(self, g: CSRGraph):
+        self.g = g
+        self.name = g.name
+
+    @property
+    def num_nodes(self) -> int:
+        return self.g.num_nodes
+
+    @property
+    def num_edges(self) -> int:
+        return self.g.num_edges
+
+    @property
+    def feat_dim(self) -> int:
+        return self.g.feat_dim
+
+    def degrees(self):
+        return self.g.degrees()
+
+    def out_degrees(self, nodes):
+        return self.g.out_degrees(nodes)
+
+    def neighbors(self, u):
+        return self.g.neighbors(u)
+
+    def gather_edges(self, rows, offsets):
+        return self.g.gather_edges(rows, offsets)
+
+    def gather_features(self, ids):
+        return self.g.gather_features(ids)
+
+    def gather_labels(self, ids):
+        return self.g.gather_labels(ids)
+
+    def io_counters(self) -> dict:
+        return {"requests": 0, "block_fetches": 0, "bytes_fetched": 0,
+                "hits": 0, "misses": 0, "evictions": 0}
+
+    def stats(self) -> dict:
+        return {"kind": self.kind, **self.io_counters()}
+
+    def to_csr(self) -> CSRGraph:
+        return self.g
+
+    def close(self) -> None:
+        pass
+
+
+def _pad_to_block(f, block_bytes: int) -> int:
+    """Zero-pad an open binary file to the next block boundary."""
+    size = f.tell()
+    pad = -size % block_bytes
+    if pad:
+        f.write(b"\0" * pad)
+    return size
+
+
+def save_graph(g: CSRGraph, path: str, *,
+               block_bytes: int | None = None) -> dict:
+    """Serialize ``g`` to the on-disk GraphStore layout.
+
+    ``path`` becomes a directory holding one binary file per array —
+    ``indptr.bin`` (int64), ``indices.bin`` (int32, the paper's
+    capacity-dominant edge-list array), ``features.bin`` (float32
+    row-major), ``labels.bin`` (int32) — each zero-padded to a
+    ``block_bytes`` boundary, plus a small JSON manifest with dtypes,
+    shapes and logical byte sizes.  Returns the manifest dict.
+    """
+    block_bytes = block_bytes or DEFAULT.diskstore.block_bytes
+    os.makedirs(path, exist_ok=True)
+    arrays = {
+        "indptr": g.indptr.astype(np.int64),
+        "indices": g.indices.astype(np.int32),
+    }
+    if g.features is not None:
+        arrays["features"] = np.ascontiguousarray(g.features, np.float32)
+    if g.labels is not None:
+        arrays["labels"] = g.labels.astype(np.int32)
+    manifest = {
+        "format": FORMAT, "version": 1, "name": g.name,
+        "num_nodes": g.num_nodes, "num_edges": g.num_edges,
+        "feat_dim": g.feat_dim, "block_bytes": block_bytes,
+        "arrays": {},
+    }
+    if g.labels is not None:
+        manifest["n_classes"] = int(g.labels.max()) + 1
+    for key, arr in arrays.items():
+        fname = f"{key}.bin"
+        with open(os.path.join(path, fname), "wb") as f:
+            f.write(arr.tobytes())
+            nbytes = _pad_to_block(f, block_bytes)
+        manifest["arrays"][key] = {
+            "file": fname, "dtype": arr.dtype.name,
+            "shape": list(arr.shape), "nbytes": nbytes,
+        }
+    with open(os.path.join(path, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+class DiskStore:
+    """Out-of-core ``GraphStore``: block-granular ``pread`` behind a live
+    page cache.
+
+    Every access method resolves to byte ranges in the backing files,
+    fetched in ``block_bytes`` units through one cache shared by all
+    arrays (block IDs are namespaced per file).  ``policy='lru'`` models
+    the OS page cache; ``policy='pinned'`` is the paper's §IV-C
+    user-space scratchpad — half the budget statically pins the
+    hottest (highest-degree) edge blocks, preloaded at open, the rest is
+    LRU.  Counters (``io_counters``) record requests, block fetches,
+    bytes fetched from disk, and the cache's hits/misses/evictions;
+    they are cumulative and thread-safe (producer workers share the
+    store under one lock).
+    """
+
+    kind = "disk"
+
+    def __init__(self, path: str, *, cache_mb: float | None = None,
+                 policy: str | None = None, cache_blocks: int | None = None,
+                 spec: SystemSpec = DEFAULT):
+        self.path = path
+        with open(os.path.join(path, MANIFEST)) as f:
+            self.manifest = json.load(f)
+        if self.manifest.get("format") != FORMAT:
+            raise ValueError(f"{path}: not a {FORMAT} directory")
+        self.name = self.manifest["name"]
+        self.block_bytes = int(self.manifest["block_bytes"])
+        self.cache_mb = (spec.diskstore.cache_mb if cache_mb is None
+                         else float(cache_mb))
+        self.policy = policy or spec.diskstore.policy
+        if self.policy not in ("lru", "pinned"):
+            raise ValueError(f"unknown cache policy {self.policy!r}; "
+                             "have ('lru', 'pinned')")
+
+        self._arrays = self.manifest["arrays"]
+        self._ns = {k: i for i, k in enumerate(_ARRAY_ORDER)
+                    if k in self._arrays}
+        self._dtype = {k: np.dtype(a["dtype"])
+                       for k, a in self._arrays.items()}
+        self._fd = {k: os.open(os.path.join(path, a["file"]), os.O_RDONLY)
+                    for k, a in self._arrays.items()}
+
+        # the CSR row index stays resident — it IS the index structure
+        # (N+1 int64: a few MB even at the paper's billion-edge scale)
+        n = int(self.manifest["num_nodes"])
+        self.indptr = np.fromfile(
+            os.path.join(path, self._arrays["indptr"]["file"]),
+            dtype=self._dtype["indptr"], count=n + 1)
+
+        if cache_blocks is None:
+            cache_blocks = max(4, int(self.cache_mb * (1 << 20))
+                               // self.block_bytes)
+        self.cache_blocks = int(cache_blocks)
+        self._lock = threading.Lock()
+        self._tls = threading.local()
+        self._requests = 0
+        self._block_fetches = 0
+        self._bytes_fetched = 0
+        if self.policy == "pinned":
+            self._cache = PinnedCache(
+                _EdgeBlockIndex(self), self.cache_blocks, self.block_bytes,
+                entry_bytes=self._dtype["indices"].itemsize)
+            self._preload_pinned()
+        else:
+            self._cache = LRUCache(self.cache_blocks)
+
+    # -- sizes ---------------------------------------------------------------
+    @property
+    def num_nodes(self) -> int:
+        return int(self.manifest["num_nodes"])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.manifest["num_edges"])
+
+    @property
+    def feat_dim(self) -> int:
+        return int(self.manifest["feat_dim"])
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.manifest.get("n_classes", 0))
+
+    def nbytes_on_disk(self) -> int:
+        """Total on-disk footprint: actual (block-padded) file sizes."""
+        return sum(os.path.getsize(os.path.join(self.path, a["file"]))
+                   for a in self._arrays.values())
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def out_degrees(self, nodes) -> np.ndarray:
+        nodes = np.asarray(nodes, np.int64)
+        return (self.indptr[nodes + 1] - self.indptr[nodes]).astype(np.int64)
+
+    def edge_byte_range(self, u: int, entry_bytes: int | None = None
+                        ) -> tuple[int, int]:
+        """Byte extent of node u's neighbor list within ``indices.bin``
+        (defaults to the on-disk entry width, int32 = 4 B)."""
+        eb = entry_bytes or self._dtype["indices"].itemsize
+        return (int(self.indptr[u]) * eb, int(self.indptr[u + 1]) * eb)
+
+    # -- paged read path -----------------------------------------------------
+    def _fetch(self, key: str, block: int) -> bytes:
+        return os.pread(self._fd[key], self.block_bytes,
+                        block * self.block_bytes)
+
+    def _thread_counters(self) -> dict:
+        c = getattr(self._tls, "c", None)
+        if c is None:
+            c = {"requests": 0, "block_fetches": 0, "bytes_fetched": 0,
+                 "hits": 0, "misses": 0, "evictions": 0}
+            self._tls.c = c
+        return c
+
+    def _read_range(self, key: str, lo: int, hi: int) -> bytes:
+        """Bytes [lo, hi) of array ``key``, block-granular via the cache."""
+        if hi <= lo:
+            return b""
+        B = self.block_bytes
+        first, last = lo // B, (hi - 1) // B
+        ns = self._ns[key] * _NS_STRIDE
+        hits = misses = nbytes = 0
+        with self._lock:
+            ev0 = self._cache.evictions
+            parts = []
+            for blk in range(first, last + 1):
+                data = self._cache.get(ns + blk)
+                if data is None:
+                    data = self._fetch(key, blk)
+                    self._cache.put(ns + blk, data)
+                    misses += 1
+                    nbytes += len(data)
+                else:
+                    hits += 1
+                parts.append(data)
+            self._requests += 1
+            self._block_fetches += misses
+            self._bytes_fetched += nbytes
+            evictions = self._cache.evictions - ev0
+        t = self._thread_counters()     # per-thread: exact per-batch deltas
+        t["requests"] += 1
+        t["hits"] += hits
+        t["misses"] += misses
+        t["block_fetches"] += misses
+        t["bytes_fetched"] += nbytes
+        t["evictions"] += evictions
+        buf = parts[0] if len(parts) == 1 else b"".join(parts)
+        off = lo - first * B
+        return buf[off:off + (hi - lo)]
+
+    def _read_array(self, key: str, lo_entry: int, hi_entry: int
+                    ) -> np.ndarray:
+        dt = self._dtype[key]
+        raw = self._read_range(key, lo_entry * dt.itemsize,
+                               hi_entry * dt.itemsize)
+        return np.frombuffer(raw, dtype=dt)
+
+    def _preload_pinned(self) -> None:
+        """Load the pinned hot blocks' payloads eagerly (the §IV-C runtime
+        stages its scratchpad before training starts).  The staging reads
+        count as block fetches — they are real disk I/O."""
+        ns = self._ns["indices"] * _NS_STRIDE
+        for blk in sorted(self._cache._pinned):
+            data = self._fetch("indices", blk - ns)
+            self._cache.put(blk, data)
+            self._block_fetches += 1
+            self._bytes_fetched += len(data)
+
+    # -- GraphStore access methods -------------------------------------------
+    def neighbors(self, u: int) -> np.ndarray:
+        return self._read_array("indices", int(self.indptr[u]),
+                                int(self.indptr[u + 1]))
+
+    def gather_edges(self, rows, offsets) -> np.ndarray:
+        """Same contract as ``CSRGraph.gather_edges`` — but each row's
+        neighbor-list chunk is fetched through the page cache, so the
+        block-request stream is exactly the per-target "chunk" fetch the
+        paper's storage tier serves."""
+        rows = np.asarray(rows, np.int64)
+        off = np.asarray(offsets, np.int64)
+        out = np.empty(off.shape, np.int32)
+        ip = self.indptr
+        for i, u in enumerate(rows):
+            lo, hi = int(ip[u]), int(ip[u + 1])
+            if hi > lo:
+                out[i] = self._read_array("indices", lo, hi)[off[i]]
+            else:
+                out[i] = u
+        return out
+
+    def gather_features(self, ids) -> np.ndarray:
+        ids = np.asarray(ids)
+        if "features" not in self._arrays:
+            raise ValueError(f"{self.path}: store has no feature table")
+        F = self.feat_dim
+        uniq, inverse = np.unique(ids.reshape(-1), return_inverse=True)
+        rows = np.empty((uniq.size, F), np.float32)
+        for j, u in enumerate(uniq):
+            rows[j] = self._read_array("features", int(u) * F,
+                                       (int(u) + 1) * F)
+        return rows[inverse].reshape(ids.shape + (F,))
+
+    def gather_labels(self, ids) -> np.ndarray:
+        ids = np.asarray(ids)
+        if "labels" not in self._arrays:
+            raise ValueError(f"{self.path}: store has no labels")
+        uniq, inverse = np.unique(ids.reshape(-1), return_inverse=True)
+        vals = np.empty(uniq.size, np.int32)
+        for j, u in enumerate(uniq):
+            vals[j] = self._read_array("labels", int(u), int(u) + 1)[0]
+        return vals[inverse].reshape(ids.shape)
+
+    # -- accounting ----------------------------------------------------------
+    def io_counters(self) -> dict:
+        with self._lock:     # consistent snapshot vs. in-flight reads
+            c = self._cache.counters()
+            return {"requests": self._requests,
+                    "block_fetches": self._block_fetches,
+                    "bytes_fetched": self._bytes_fetched, **c}
+
+    def thread_io_counters(self) -> dict:
+        """This thread's share of the I/O.  A minibatch is produced
+        entirely on one worker thread, so deltas of this view give exact
+        per-batch attribution even with concurrent producers (the global
+        ``io_counters`` stay the cross-thread totals)."""
+        return dict(self._thread_counters())
+
+    def stats(self) -> dict:
+        return {"kind": self.kind, "policy": self.policy,
+                "cache_mb": self.cache_mb,
+                "cache_blocks": self.cache_blocks,
+                "nbytes_on_disk": self.nbytes_on_disk(),
+                **self.io_counters()}
+
+    def to_csr(self) -> CSRGraph:
+        """Materialize the full graph in memory (device backends and
+        tests; defeats the point for the out-of-core host path)."""
+        read = {k: np.fromfile(os.path.join(self.path, a["file"]),
+                               dtype=self._dtype[k],
+                               count=int(np.prod(a["shape"])))
+                for k, a in self._arrays.items()}
+        feats = read.get("features")
+        if feats is not None:
+            feats = feats.reshape(self._arrays["features"]["shape"])
+        return CSRGraph(indptr=read["indptr"].astype(np.int64),
+                        indices=read["indices"].astype(np.int32),
+                        features=feats, labels=read.get("labels"),
+                        name=self.name)
+
+    def close(self) -> None:
+        for fd in self._fd.values():
+            os.close(fd)
+        self._fd = {}
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class _EdgeBlockIndex:
+    """Adapter giving ``PinnedCache`` the degree-heat + byte-range view of
+    the on-disk edge-list array, in the store's namespaced block space."""
+
+    def __init__(self, store: DiskStore):
+        self._store = store
+        self._base = store._ns["indices"] * _NS_STRIDE * store.block_bytes
+
+    def degrees(self) -> np.ndarray:
+        return self._store.degrees()
+
+    def edge_byte_range(self, u: int, entry_bytes: int) -> tuple[int, int]:
+        lo, hi = self._store.edge_byte_range(u, entry_bytes)
+        return (self._base + lo, self._base + hi)
+
+
+def open_store(kind: str, *, g: CSRGraph | None = None,
+               path: str | None = None, **kw) -> GraphStore:
+    """``mem`` needs ``g``; ``disk`` needs ``path`` (saving ``g`` there
+    first when given)."""
+    if kind == "mem":
+        if g is None:
+            raise ValueError("mem store needs a graph")
+        return InMemoryStore(g)
+    if kind == "disk":
+        if path is None:
+            raise ValueError("disk store needs a path")
+        if g is not None and not os.path.exists(os.path.join(path, MANIFEST)):
+            save_graph(g, path)
+        store = DiskStore(path, **kw)
+        if g is not None:
+            # a pre-existing layout is reused only if it holds this graph
+            # — silently serving a stale one would train the wrong data
+            if (store.name, store.num_nodes, store.num_edges,
+                    store.feat_dim) != (g.name, g.num_nodes, g.num_edges,
+                                        g.feat_dim):
+                store.close()
+                raise ValueError(
+                    f"{path} holds graph {store.name!r} "
+                    f"({store.num_nodes} nodes, {store.num_edges} edges), "
+                    f"not {g.name!r} ({g.num_nodes} nodes, "
+                    f"{g.num_edges} edges); point --store-dir elsewhere "
+                    "or remove the stale layout")
+        return store
+    raise KeyError(f"unknown graph store {kind!r}; have ('mem', 'disk')")

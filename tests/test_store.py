@@ -1,0 +1,240 @@
+"""Out-of-core GraphStore: on-disk layout round-trips, block-aligned read
+path, live cache counter semantics, and mem/disk bit-identity of the host
+data plane (the acceptance bar for the paper's beyond-DRAM scenario)."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (load_dataset, kronecker_expand, make_loader,
+                        rmat_graph, sample_khop)
+from repro.storage import (DiskStore, InMemoryStore, MeasuredEngine,
+                           make_engine, open_store, save_graph)
+from repro.storage.store import MANIFEST
+
+
+@pytest.fixture(scope="module")
+def disk_dir(small_graph, tmp_path_factory):
+    path = tmp_path_factory.mktemp("graphstore")
+    save_graph(small_graph, str(path))
+    return str(path)
+
+
+# ---------------------------------------------------------------------------
+# on-disk layout
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrip_bit_identity(small_graph, disk_dir):
+    g = small_graph
+    st = DiskStore(disk_dir)
+    g2 = st.to_csr()
+    np.testing.assert_array_equal(g2.indptr, g.indptr)
+    np.testing.assert_array_equal(g2.indices, g.indices)
+    np.testing.assert_array_equal(g2.features, g.features)
+    np.testing.assert_array_equal(g2.labels, g.labels)
+    assert g2.indices.dtype == np.int32
+    assert g2.features.dtype == np.float32
+    g2.validate()
+    st.close()
+
+
+def test_layout_is_block_aligned(disk_dir):
+    st = DiskStore(disk_dir)
+    for key, meta in st.manifest["arrays"].items():
+        size = os.path.getsize(os.path.join(disk_dir, meta["file"]))
+        assert size % st.block_bytes == 0, key
+        assert size >= meta["nbytes"]
+    st.close()
+
+
+def test_edge_byte_range_agreement(small_graph, disk_dir):
+    """The store's on-disk byte extents (int32 entries) agree with the
+    graph's ``edge_byte_range`` at the same entry width, and reading a
+    node's neighbor list touches exactly those blocks."""
+    g = small_graph
+    entry = 4                                   # on-disk int32 entries
+    for u in (0, 7, int(np.argmax(g.degrees()))):
+        st = DiskStore(disk_dir, cache_blocks=4)    # cold cache per node
+        assert st.edge_byte_range(u) == g.edge_byte_range(u, entry)
+        lo, hi = st.edge_byte_range(u)
+        want_blocks = max(hi - 1, lo) // st.block_bytes - lo // st.block_bytes + 1
+        nbrs = st.neighbors(u)
+        np.testing.assert_array_equal(nbrs, g.neighbors(u))
+        if hi > lo:                             # cold cache: every block
+            assert st.io_counters()["block_fetches"] == want_blocks
+        st.close()
+
+
+def test_store_without_features_rejects_gather(tmp_path):
+    g = rmat_graph(64, 256, seed=0)             # no features attached
+    save_graph(g, str(tmp_path))
+    st = DiskStore(str(tmp_path))
+    with pytest.raises(ValueError):
+        st.gather_features(np.arange(4))
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# live cache semantics
+# ---------------------------------------------------------------------------
+
+def test_cache_counters_under_forced_eviction(small_graph, disk_dir):
+    """A working set larger than the cache must evict and re-miss; the
+    counters must stay consistent (hits + misses = lookups, every miss is
+    one block fetch)."""
+    st = DiskStore(disk_dir, cache_blocks=8)
+    # sweep all feature rows twice: working set >> 8 blocks, so the second
+    # pass cannot be served from cache
+    for _ in range(2):
+        for u in range(0, st.num_nodes, 50):
+            st.gather_features(np.array([u]))
+    io = st.io_counters()
+    assert io["misses"] > 0
+    assert io["evictions"] > 0
+    assert io["block_fetches"] == io["misses"]
+    assert io["hits"] + io["misses"] >= io["requests"]
+    # second sweep re-missed: far more fetches than unique blocks touched
+    unique_blocks = len({(u * st.feat_dim * 4) // st.block_bytes
+                         for u in range(0, st.num_nodes, 50)})
+    assert io["misses"] > unique_blocks
+    st.close()
+
+
+def test_cache_hit_path_reuses_blocks(disk_dir):
+    st = DiskStore(disk_dir, cache_mb=4)
+    st.neighbors(3)
+    before = st.io_counters()
+    st.neighbors(3)                              # same chunk: pure hits
+    after = st.io_counters()
+    assert after["block_fetches"] == before["block_fetches"]
+    assert after["hits"] > before["hits"]
+    st.close()
+
+
+def test_pinned_policy_serves_hot_blocks(small_graph, disk_dir):
+    g = small_graph
+    st = DiskStore(disk_dir, cache_mb=1, policy="pinned")
+    staged = st.io_counters()["block_fetches"]
+    assert staged > 0                            # scratchpad pre-staged
+    hub = int(np.argmax(g.degrees()))
+    before = st.io_counters()
+    np.testing.assert_array_equal(st.neighbors(hub), g.neighbors(hub))
+    after = st.io_counters()
+    assert after["block_fetches"] == before["block_fetches"]  # pinned hit
+    assert after["hits"] > before["hits"]
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# sampling + host data plane through the store
+# ---------------------------------------------------------------------------
+
+def test_sampler_mem_disk_bit_identity(small_graph, disk_dir):
+    g = small_graph
+    st = DiskStore(disk_dir, cache_mb=0.25)
+    targets = np.arange(32)
+    a = sample_khop(g, targets, (5, 3), seed=11)
+    b = sample_khop(st, targets, (5, 3), seed=11)
+    for t, (ha, hb) in enumerate(zip(a.hops, b.hops)):
+        np.testing.assert_array_equal(ha, hb, err_msg=f"hop {t}")
+    np.testing.assert_array_equal(a.touched_nodes, b.touched_nodes)
+    np.testing.assert_array_equal(a.subgraph_nodes, b.subgraph_nodes)
+    assert a.io is None                          # raw arrays: nothing issued
+    assert b.io is not None and b.io["requests"] > 0
+    st.close()
+
+
+def test_inmemory_store_matches_raw_graph(small_graph):
+    g = small_graph
+    st = InMemoryStore(g)
+    a = sample_khop(g, np.arange(16), (4, 2), seed=3)
+    b = sample_khop(st, np.arange(16), (4, 2), seed=3)
+    for ha, hb in zip(a.hops, b.hops):
+        np.testing.assert_array_equal(ha, hb)
+    assert b.io == st.io_counters()              # all zeros, but recorded
+    np.testing.assert_array_equal(st.gather_features(np.arange(8)),
+                                  g.features[:8])
+
+
+def test_host_loader_mem_disk_bit_identity(small_graph, disk_dir):
+    """The acceptance bar: at equal seeds the disk-backed host loader
+    produces bit-identical minibatches to the in-memory one, while its
+    page cache records real misses."""
+    g = small_graph
+    mem = make_loader("host", g, batch_size=8, fanouts=(3, 2), seed=0)
+    disk = make_loader("host", None, batch_size=8, fanouts=(3, 2), seed=0,
+                       store=DiskStore(disk_dir, cache_mb=0.25))
+    try:
+        for i in range(3):
+            a, b = mem.get_batch(i), disk.get_batch(i)
+            np.testing.assert_array_equal(a.targets, b.targets)
+            for x, y in zip(a.hop_ids, b.hop_ids):
+                np.testing.assert_array_equal(x, y)
+            for x, y in zip(a.hop_feats, b.hop_feats):
+                np.testing.assert_array_equal(x, y)
+            np.testing.assert_array_equal(a.labels, b.labels)
+            assert b.trace.io is not None
+        stats = disk.stats()
+        assert stats["store"]["misses"] > 0
+    finally:
+        mem.close()
+        disk.close()
+
+
+def test_measured_engine_reports_real_io(small_graph, disk_dir):
+    g = small_graph
+    st = DiskStore(disk_dir, cache_mb=0.25)
+    eng = make_engine("mmap", g, measured=True, store=st)
+    assert isinstance(eng, MeasuredEngine)
+    trace = sample_khop(st, np.arange(16), (4, 2), seed=5)
+    cost = eng.batch_cost(trace)
+    assert cost.time_s > 0                       # simulated model intact
+    assert cost.meta["measured"]["block_fetches"] == \
+        trace.io["block_fetches"]
+    rep = eng.report()
+    assert rep["measured_totals"]["requests"] == trace.io["requests"]
+    assert rep["store"]["kind"] == "disk"
+    st.close()
+
+
+def test_open_store_registry(small_graph, tmp_path):
+    st = open_store("mem", g=small_graph)
+    assert isinstance(st, InMemoryStore)
+    st2 = open_store("disk", g=small_graph, path=str(tmp_path))
+    assert isinstance(st2, DiskStore)
+    assert os.path.exists(os.path.join(str(tmp_path), MANIFEST))
+    assert st2.num_edges == small_graph.num_edges
+    st2.close()
+    with pytest.raises(KeyError):
+        open_store("tape", g=small_graph)
+
+
+def test_open_store_rejects_stale_layout(small_graph, tmp_path):
+    """Reusing a --store-dir that holds a *different* graph must fail
+    loudly instead of silently training on stale data."""
+    open_store("disk", g=small_graph, path=str(tmp_path)).close()
+    other = rmat_graph(32, 128, seed=1)
+    with pytest.raises(ValueError, match="stale"):
+        open_store("disk", g=other, path=str(tmp_path))
+    # same graph: reuse is fine
+    open_store("disk", g=small_graph, path=str(tmp_path)).close()
+
+
+# ---------------------------------------------------------------------------
+# kronecker_expand chunked build (peak-memory fix)
+# ---------------------------------------------------------------------------
+
+def test_kronecker_chunked_bit_identical(tmp_path):
+    g = rmat_graph(256, 2048, seed=9)
+    base = kronecker_expand(g, 4, seed=1, edge_keep=0.6, chunk_pairs=1)
+    for chunk in (2, 3, 100):
+        other = kronecker_expand(g, 4, seed=1, edge_keep=0.6,
+                                 chunk_pairs=chunk)
+        np.testing.assert_array_equal(base.indptr, other.indptr)
+        np.testing.assert_array_equal(base.indices, other.indices)
+    spilled = kronecker_expand(g, 4, seed=1, edge_keep=0.6, chunk_pairs=2,
+                               spill_dir=str(tmp_path / "spill"))
+    np.testing.assert_array_equal(base.indptr, spilled.indptr)
+    np.testing.assert_array_equal(base.indices, spilled.indices)
+    assert not os.listdir(str(tmp_path / "spill"))   # spill files cleaned
