@@ -2,6 +2,26 @@
 data-preparation backend (host / isp / pallas) feeding the same GraphSAGE
 consumer — the live-training version of the paper's backend comparison.
 
+Row keys encode the configuration: ``host``, ``host@disk``,
+``pallas@devcache`` (HBM feature cache over in-memory backing),
+``pallas@disk+devcache`` (HBM cache missing to real paged disk reads),
+``host@saint`` (GraphSAINT walks), ...  When ``--device-cache-rows`` is
+set, the full-upload ``pallas`` baseline row rides along, so one run
+holds both sides of the cached-vs-uploaded comparison.  Each row's
+``loader_stats`` carries the cache counters twice: the ``store`` /
+``devcache`` blocks are cumulative (warmup and preload included), while
+``store_epoch`` / ``devcache_epoch`` cover the window since
+``loader.start_epoch()`` was called (after warmup) — use the ``_epoch``
+views for hit-rate curves comparable across runs.  Caveat: async
+production runs ahead of consumption, so for the host backend the
+epoch boundary is fuzzy by the producer queue depth (sharp for the
+synchronous device backends; use small queue depths when exact
+windows matter).
+
+``--contention-workers N`` additionally runs the DiskStore contention
+micro-benchmark: N producer threads hammer the paged read path with the
+page-cache lock sharded vs. global, measuring multi-worker scaling.
+
 Run:  PYTHONPATH=src python benchmarks/bench_backends.py
 Emits BENCH_backends.json (the perf-trajectory seed) and prints one line
 per backend.
@@ -11,8 +31,95 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
+import time
+
+
+def sampler_locality(g, sampler: str, *, steps: int, batch: int, fanouts,
+                     walk_length: int, seed: int = 0) -> dict:
+    """Block-request locality of a sampler family (paper §VI-F): replay
+    ``steps`` batches of its access trace against the 4 KB block view of
+    the edge array and report how many blocks each request touches and
+    how often blocks repeat within a batch (the reuse a page cache can
+    harvest)."""
+    import numpy as np
+
+    from repro.core import batch_targets, sample_khop, saint_random_walk
+    from repro.storage import block_trace
+
+    requests = total = unique = 0
+    for i in range(steps):
+        targets = batch_targets(g, i, batch, seed)
+        if sampler == "saint":
+            trace = saint_random_walk(g, targets, walk_length, seed=seed + i)
+        else:
+            trace = sample_khop(g, targets, fanouts, seed=seed + i)
+        bt = block_trace(g, trace.touched_nodes)
+        requests += bt.n_requests
+        total += bt.total_blocks
+        unique += bt.unique_blocks
+    return {"sampler": sampler, "batches": steps, "requests": requests,
+            "total_blocks": total, "unique_blocks": unique,
+            "blocks_per_request": total / max(requests, 1),
+            "block_reuse": total / max(unique, 1)}
+
+
+def contention_bench(store_dir: str, *, n_workers: int, batches: int,
+                     batch: int, fanouts, cache_mb: float | None,
+                     policy: str | None = None,
+                     lock_shards: int | None = None) -> dict:
+    """Multi-producer DiskStore scaling: ``n_workers`` threads produce
+    disjoint batches through one shared store, with the page-cache lock
+    global (shards=1) vs. hashed-block sharded (``lock_shards``, default
+    the storage spec's).  Reports wall time and aggregate batches/s for
+    both (the ROADMAP's Fig. 17 contention measurement)."""
+    import threading
+
+    from repro.core import batch_targets, sample_khop
+    from repro.storage import DiskStore
+
+    # warm the OS page cache over the store's files once, so both arms
+    # measure lock behavior rather than cold-read order
+    for name in os.listdir(store_dir):
+        with open(os.path.join(store_dir, name), "rb") as f:
+            while f.read(1 << 20):
+                pass
+
+    def run(lock_shards: int | None) -> dict:
+        store = DiskStore(store_dir, cache_mb=cache_mb, policy=policy,
+                          lock_shards=lock_shards)
+        try:
+            def worker(w: int):
+                for i in range(batches):
+                    idx = w * batches + i
+                    targets = batch_targets(store, idx, batch, 0)
+                    trace = sample_khop(store, targets, fanouts, seed=idx)
+                    for h in trace.hops:
+                        store.gather_features(h)
+            threads = [threading.Thread(target=worker, args=(w,))
+                       for w in range(n_workers)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            dt = time.perf_counter() - t0
+            io = store.io_counters()
+        finally:
+            store.close()
+        return {"lock_shards": store.lock_shards, "wall_s": dt,
+                "batches_per_s": n_workers * batches / dt,
+                "block_fetches": io["block_fetches"], "hits": io["hits"],
+                "misses": io["misses"]}
+
+    sharded = run(lock_shards)      # None = spec default shard count
+    global_lock = run(1)
+    return {"workers": n_workers, "batches_per_worker": batches,
+            "global": global_lock, "sharded": sharded,
+            "speedup": sharded["batches_per_s"]
+            / max(global_lock["batches_per_s"], 1e-9)}
 
 
 def main(argv=None):
@@ -23,13 +130,24 @@ def main(argv=None):
     ap.add_argument("--backends", default="host,isp,pallas")
     ap.add_argument("--graph-store", default="mem",
                     help="comma list of graph stores to bench: mem and/or "
-                         "disk (disk rows — keyed 'backend@disk' — run the "
-                         "host backend through real paged reads; device "
-                         "backends are skipped, they hold device copies)")
+                         "disk (disk rows run the host backend — and the "
+                         "pallas backend when --device-cache-rows is set — "
+                         "through real paged reads)")
     ap.add_argument("--cache-mb", type=float, default=None,
                     help="disk-store page-cache budget in MB")
     ap.add_argument("--cache-policy", default="lru",
                     choices=("lru", "pinned"))
+    ap.add_argument("--lock-shards", type=int, default=None,
+                    help="disk-store page-cache lock shards")
+    ap.add_argument("--device-cache-rows", type=int, default=0,
+                    help="pallas backend: HBM feature-cache rows (adds "
+                         "the pallas@devcache row; 0 = full upload)")
+    ap.add_argument("--device-cache-policy", default="pinned",
+                    choices=("lru", "pinned"))
+    ap.add_argument("--sampler", default="khop", choices=("khop", "saint"),
+                    help="sampler family (saint restricts to the host "
+                         "backend and overrides --fanouts)")
+    ap.add_argument("--walk-length", type=int, default=4)
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--batch", type=int, default=32)
@@ -37,6 +155,12 @@ def main(argv=None):
     ap.add_argument("--hidden", type=int, default=64)
     ap.add_argument("--prefetch", type=int, default=0,
                     help="async prefetch queue depth (0 = synchronous)")
+    ap.add_argument("--contention-workers", type=int, default=0,
+                    help="run the DiskStore multi-producer contention "
+                         "micro-benchmark with this many threads "
+                         "(0 = skip; 4 matches the default producer pool)")
+    ap.add_argument("--contention-batches", type=int, default=8,
+                    help="batches per contention worker")
     ap.add_argument("--out", default="BENCH_backends.json")
     args = ap.parse_args(argv)
 
@@ -49,7 +173,14 @@ def main(argv=None):
     from repro.launch.mesh import make_host_mesh
     from repro.optim import adamw
 
-    fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    if args.sampler == "saint":
+        fanouts = (args.walk_length + 1,)
+        if args.backends != "host":
+            print(f"bench_backends: --sampler saint is host-only; "
+                  f"overriding --backends {args.backends!r} -> 'host'")
+        args.backends = "host"
+    else:
+        fanouts = tuple(int(x) for x in args.fanouts.split(","))
     g = load_dataset(args.dataset, large_scale=args.large_scale)
     mesh = make_host_mesh()
     rules = ShardingRules.default()
@@ -58,63 +189,121 @@ def main(argv=None):
                               fanouts=fanouts))
     opt = adamw(1e-3)
 
+    device_cache = None
+    if args.device_cache_rows:
+        from repro.storage import DeviceCacheSpec
+        device_cache = DeviceCacheSpec(rows=args.device_cache_rows,
+                                       policy=args.device_cache_policy)
+
     store_dir = None
     store_kinds = args.graph_store.split(",")
     unknown = set(store_kinds) - {"mem", "disk"}
     if unknown:
         ap.error(f"--graph-store: unknown kind(s) {sorted(unknown)}; "
                  "have mem, disk")
-    if "disk" in store_kinds:
+    if "disk" in store_kinds or args.contention_workers:
         import atexit
         import shutil
         import tempfile
+
+        from repro.storage import save_graph
         store_dir = tempfile.mkdtemp(prefix=f"graphstore-{args.dataset}-")
         atexit.register(shutil.rmtree, store_dir, ignore_errors=True)
+        save_graph(g, store_dir)
 
     results = {}
+    configs = []
     for kind in store_kinds:
         for backend in args.backends.split(","):
-            if kind == "disk" and backend != "host":
+            dc = device_cache if backend == "pallas" else None
+            if kind == "disk" and backend != "host" and dc is None:
                 print(f"bench_backends: skipping {backend}@disk (device "
-                      "backends hold device-resident copies)")
+                      "backends hold device-resident copies; pallas joins "
+                      "the disk rows via --device-cache-rows)")
                 continue
-            store = None
-            if kind == "disk":
-                from repro.storage import open_store
-                store = open_store("disk", g=g, path=store_dir,
-                                   cache_mb=args.cache_mb,
-                                   policy=args.cache_policy)
-            row = backend if kind == "mem" else f"{backend}@{kind}"
-            loader = make_loader(backend, g, batch_size=args.batch,
-                                 fanouts=fanouts, mesh=mesh,
-                                 prefetch=args.prefetch, store=store)
-            try:
-                step = build_train_step(loader, gnn, opt, mesh, rules)
-                p = gnn.init(jax.random.key(0))
-                state = {"params": p, "opt": opt.init(p),
-                         "step": jnp.zeros((), jnp.int32)}
-                with mesh:
-                    # warmup covers jit compilation + pipeline fill
-                    state, _ = train_loop(loader, step, state,
-                                          steps=args.warmup)
-                    state, stats = train_loop(loader, step, state,
-                                              steps=args.warmup + args.steps,
-                                              start=args.warmup)
-            finally:
-                loader.close()
-                if store is not None:
-                    store.close()
-            results[row] = {
-                "steps_per_s": stats.steps_per_s,
-                "idle_fraction": stats.idle_fraction,
-                "idle_s": stats.idle_s,
-                "busy_s": stats.busy_s,
-                "loader_stats": loader.stats(),
-            }
-            print(f"bench_backends,{args.dataset},{row},"
-                  f"steps_per_s,{stats.steps_per_s:.4g}")
-            print(f"bench_backends,{args.dataset},{row},"
-                  f"idle_fraction,{stats.idle_fraction:.4g}")
+            if dc is not None and kind == "mem":
+                # the full-upload baseline rides along, so one run holds
+                # both sides of the cached-vs-uploaded comparison
+                configs.append((kind, backend, None))
+            configs.append((kind, backend, dc))
+    for kind, backend, dc in configs:
+        store = None
+        if kind == "disk":
+            from repro.storage import open_store
+            store = open_store("disk", g=g, path=store_dir,
+                               cache_mb=args.cache_mb,
+                               policy=args.cache_policy,
+                               lock_shards=args.lock_shards)
+        suffix = [kind] if kind != "mem" else []
+        if dc is not None:
+            suffix.append("devcache")
+        if args.sampler != "khop":
+            suffix.append(args.sampler)
+        row = backend + (f"@{'+'.join(suffix)}" if suffix else "")
+        loader = make_loader(backend, g, batch_size=args.batch,
+                             fanouts=fanouts, mesh=mesh,
+                             prefetch=args.prefetch, store=store,
+                             sampler=args.sampler,
+                             walk_length=args.walk_length,
+                             device_cache=dc)
+        try:
+            step = build_train_step(loader, gnn, opt, mesh, rules)
+            p = gnn.init(jax.random.key(0))
+            state = {"params": p, "opt": opt.init(p),
+                     "step": jnp.zeros((), jnp.int32)}
+            with mesh:
+                # warmup covers jit compilation + pipeline fill
+                state, _ = train_loop(loader, step, state,
+                                      steps=args.warmup)
+                # cache counters from here on are the measured
+                # epoch's, not cumulative-including-warmup
+                loader.start_epoch()
+                state, stats = train_loop(loader, step, state,
+                                          steps=args.warmup + args.steps,
+                                          start=args.warmup)
+            loader_stats = loader.stats()
+        finally:
+            loader.close()
+            if store is not None:
+                store.close()
+        results[row] = {
+            "steps_per_s": stats.steps_per_s,
+            "idle_fraction": stats.idle_fraction,
+            "idle_s": stats.idle_s,
+            "busy_s": stats.busy_s,
+            "loader_stats": loader_stats,
+        }
+        print(f"bench_backends,{args.dataset},{row},"
+              f"steps_per_s,{stats.steps_per_s:.4g}")
+        print(f"bench_backends,{args.dataset},{row},"
+              f"idle_fraction,{stats.idle_fraction:.4g}")
+        dcs = loader_stats.get("devcache")
+        if dcs:
+            print(f"bench_backends,{args.dataset},{row},devcache,"
+                  f"hits={dcs['hits']} misses={dcs['misses']} "
+                  f"evictions={dcs['evictions']}")
+
+    contention = None
+    if args.contention_workers:
+        contention = contention_bench(
+            store_dir, n_workers=args.contention_workers,
+            batches=args.contention_batches, batch=args.batch,
+            fanouts=fanouts, cache_mb=args.cache_mb,
+            policy=args.cache_policy, lock_shards=args.lock_shards)
+        print(f"bench_backends,{args.dataset},diskstore-contention,"
+              f"speedup,{contention['speedup']:.3g} "
+              f"({contention['workers']} workers, "
+              f"{contention['global']['batches_per_s']:.3g} -> "
+              f"{contention['sharded']['batches_per_s']:.3g} batches/s)")
+
+    # sampler-family block-request locality (khop vs saint comparison);
+    # loop-invariant, so computed once for the whole run
+    locality = sampler_locality(g, args.sampler, steps=min(args.steps, 4),
+                                batch=args.batch, fanouts=fanouts,
+                                walk_length=args.walk_length)
+    print(f"bench_backends,{args.dataset},{args.sampler},locality,"
+          f"blocks_per_request={locality['blocks_per_request']:.3g} "
+          f"block_reuse={locality['block_reuse']:.3g}")
 
     payload = {
         "bench": "backends",
@@ -125,12 +314,17 @@ def main(argv=None):
         "fanouts": list(fanouts),
         "hidden": args.hidden,
         "prefetch": args.prefetch,
+        "sampler": args.sampler,
         "graph_store": args.graph_store,
         "cache_mb": args.cache_mb,
+        "device_cache_rows": args.device_cache_rows,
+        "locality": locality,
         "backend_default": jax.default_backend(),
         "platform": platform.platform(),
         "results": results,
     }
+    if contention is not None:
+        payload["contention"] = contention
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")

@@ -19,7 +19,13 @@ Backends (``make_loader(name, ...)``):
   architecture).
 * ``pallas`` — composes the ``kernels/neighbor_sample`` k-hop with the
   ``kernels/feature_gather`` row gather: the single-device in-storage-style
-  kernel path (HBM as flash, VMEM as the SSD page buffer).
+  kernel path (HBM as flash, VMEM as the SSD page buffer).  With
+  ``device_cache`` set, feature rows read through an HBM-resident
+  ``storage.devcache.DeviceFeatureCache`` instead of a full-table upload
+  (the device-side out-of-core path, bit-identical at equal seeds).
+
+The host backend additionally supports ``sampler='saint'`` (GraphSAINT
+random walks) next to the default ``'khop'`` fanout expansion.
 
 A simulated storage tier (``storage/engines.py``) can be attached to any
 loader: each batch's access trace is replayed against the engine's cost
@@ -53,7 +59,8 @@ from typing import Protocol, Sequence, runtime_checkable
 import numpy as np
 
 from repro.core.graph import CSRGraph
-from repro.core.sampler import DEFAULT_FANOUTS, SampleTrace, sample_khop
+from repro.core.sampler import (DEFAULT_FANOUTS, SampleTrace, _io_delta,
+                                _io_snapshot, sample_khop, saint_random_walk)
 
 
 @dataclasses.dataclass
@@ -111,7 +118,8 @@ def register_loader(name: str):
 def make_loader(name: str, g: CSRGraph | None, *, batch_size: int = 64,
                 fanouts: Sequence[int] = DEFAULT_FANOUTS, mesh=None,
                 seed: int = 0, storage_engine=None, prefetch: int = 0,
-                store=None, **kw) -> "SubgraphLoader":
+                store=None, sampler: str = "khop", walk_length: int = 4,
+                device_cache=None, **kw) -> "SubgraphLoader":
     """Build a registered backend loader over ``g`` and/or a GraphStore.
 
     ``store`` selects where the graph data is *read from*: None (default)
@@ -119,20 +127,41 @@ def make_loader(name: str, g: CSRGraph | None, *, batch_size: int = 64,
     host backend's sampling and feature gathers real paged disk reads
     through its page cache (the out-of-core data plane).  The device
     backends (isp/pallas) hold device-resident copies, so they
-    materialize from the store only when ``g`` is not given.
+    materialize from the store only when ``g`` is not given — except
+    feature rows on the pallas backend when ``device_cache`` is set (see
+    below).
+
+    ``sampler`` picks the sampler family: ``'khop'`` (GraphSAGE
+    Algorithm 1, the default, every backend) or ``'saint'`` (GraphSAINT
+    random walks of ``walk_length`` steps, host backend only; the loader's
+    ``fanouts`` become ``(walk_length + 1,)`` — one hop tensor holding the
+    whole walk — so a 1-layer GraphSAGE consumes the batches unchanged).
+
+    ``device_cache`` (a ``storage.specs.DeviceCacheSpec``, pallas backend
+    only) replaces the full feature-table upload with an HBM-resident
+    ``DeviceFeatureCache``: hits are gathered on-device through the
+    ``feature_gather_cached`` kernel, misses fetched through the
+    GraphStore — the device-side out-of-core path, bit-identical to the
+    full upload at equal seeds.
 
     ``prefetch > 0`` wraps the loader in a ``PrefetchingLoader`` of that
     queue depth: a background worker produces batch ``i+1`` (device
-    dispatch + simulated-storage trace included) while the consumer runs
-    step ``i``.  Per-batch-seed determinism makes the prefetched batches
-    bit-identical to synchronous ones.
+    dispatch, cache admission + simulated-storage trace included) while
+    the consumer runs step ``i``.  Per-batch-seed determinism makes the
+    prefetched batches bit-identical to synchronous ones.
     """
     if name not in LOADERS:
         raise KeyError(f"unknown backend {name!r}; have {sorted(LOADERS)}")
+    if device_cache is not None and name != "pallas":
+        raise ValueError("device_cache applies to the pallas backend only; "
+                         f"got backend {name!r}")
     if g is None and store is not None and name != "host":
         g = store.to_csr()
+    if name == "pallas":
+        kw["device_cache"] = device_cache
     loader = LOADERS[name](g, batch_size=batch_size, fanouts=tuple(fanouts),
-                           mesh=mesh, seed=seed,
+                           mesh=mesh, seed=seed, sampler=sampler,
+                           walk_length=walk_length,
                            storage_engine=storage_engine, store=store, **kw)
     if prefetch:
         from repro.core.pipeline import PrefetchingLoader
@@ -153,19 +182,33 @@ class _LoaderBase:
     """Shared target generation + simulated-storage accounting."""
 
     backend = "base"
+    SAMPLERS = ("khop",)
 
     def __init__(self, g: CSRGraph | None, *, batch_size: int, fanouts,
-                 seed: int = 0, storage_engine=None, store=None):
+                 seed: int = 0, storage_engine=None, store=None,
+                 sampler: str = "khop", walk_length: int = 4):
         self.g = g
         self.store = store if store is not None else g
         if self.store is None:
             raise ValueError("loader needs a graph or a GraphStore")
+        if sampler not in self.SAMPLERS:
+            raise ValueError(
+                f"backend {self.backend!r} supports samplers "
+                f"{self.SAMPLERS}, not {sampler!r} (GraphSAINT walks are "
+                "host-side numpy sampling)")
+        self.sampler = sampler
+        self.walk_length = int(walk_length)
         self.batch_size = batch_size
-        self.fanouts = tuple(fanouts)
+        # a SAINT batch's one hop tensor is the (M, L+1) walk — report the
+        # matching fanout so the GNN shape contract still holds
+        self.fanouts = ((self.walk_length + 1,) if sampler == "saint"
+                        else tuple(fanouts))
         self.seed = seed
         self.storage_engine = storage_engine
         self.simulated_storage_s = 0.0
         self._storage_lock = threading.Lock()
+        self.devcache = None
+        self._epoch0 = None
 
     def targets(self, idx: int) -> np.ndarray:
         return batch_targets(self.store, idx, self.batch_size, self.seed)
@@ -189,6 +232,9 @@ class _LoaderBase:
         host trace: a numpy re-sample with the same algorithmic event
         counts (host RNG stream)."""
         g = self.g if self.g is not None else self.store
+        if self.sampler == "saint":
+            return saint_random_walk(g, self.targets(idx), self.walk_length,
+                                     seed=self.seed + idx)
         return sample_khop(g, self.targets(idx), self.fanouts,
                            seed=self.seed + idx)
 
@@ -206,12 +252,37 @@ class _LoaderBase:
         delay = self.storage_delay(self.storage_cost_trace(idx))
         time.sleep(max(0.0, delay - (time.perf_counter() - t0)))
 
+    def _counter_sources(self) -> dict:
+        src = {}
+        io = getattr(self.store, "io_counters", None)
+        if io is not None:
+            src["store"] = io
+        if self.devcache is not None:
+            src["devcache"] = self.devcache.counters
+        return src
+
+    def start_epoch(self) -> None:
+        """Mark an epoch boundary: from here on, ``stats()`` reports the
+        cache counters *per-epoch* (``store_epoch`` / ``devcache_epoch``
+        deltas since this call) alongside the cumulative totals, so
+        hit-rate curves are comparable across epochs instead of being
+        swamped by warmup/preload traffic."""
+        self._epoch0 = {k: fn() for k, fn in self._counter_sources().items()}
+
     def stats(self) -> dict:
-        s = {"backend": self.backend,
+        s = {"backend": self.backend, "sampler": self.sampler,
              "simulated_storage_s": self.simulated_storage_s}
         store_stats = getattr(self.store, "stats", None)
         if store_stats is not None:
             s["store"] = store_stats()
+        if self.devcache is not None:
+            s["devcache"] = self.devcache.stats()
+        if self._epoch0 is not None:
+            for name, fn in self._counter_sources().items():
+                base = self._epoch0.get(name, {})
+                s[f"{name}_epoch"] = {
+                    k: v - base.get(k, 0) for k, v in fn().items()
+                    if isinstance(v, (int, float))}
         return s
 
     def close(self) -> None:
@@ -224,24 +295,29 @@ class _LoaderBase:
 
 @register_loader("host")
 class HostSubgraphLoader(_LoaderBase):
-    """CPU data preparation (paper Fig. 4): ``sample_khop`` + feature
-    indexing in producer threads, consumed strictly in batch order.  All
-    graph reads go through ``self.store`` — in-memory arrays by default,
-    real paged disk reads when a ``DiskStore`` is attached (the
-    out-of-core path).  The storage engine's per-trace cost is imposed
-    inside ``produce`` so the pipeline's idle-fraction metric reflects
-    the simulated tier."""
+    """CPU data preparation (paper Fig. 4): ``sample_khop`` (or GraphSAINT
+    random walks, ``sampler='saint'``) + feature indexing in producer
+    threads, consumed strictly in batch order.  All graph reads go
+    through ``self.store`` — in-memory arrays by default, real paged disk
+    reads when a ``DiskStore`` is attached (the out-of-core path).  The
+    storage engine's per-trace cost is imposed inside ``produce`` so the
+    pipeline's idle-fraction metric reflects the simulated tier."""
+
+    SAMPLERS = ("khop", "saint")
 
     def __init__(self, g, *, batch_size, fanouts, mesh=None, seed=0,
-                 storage_engine=None, store=None, n_workers: int = 4,
+                 storage_engine=None, store=None, sampler="khop",
+                 walk_length=4, n_workers: int = 4,
                  queue_depth: int = 8, straggler_factor: float = 4.0):
         super().__init__(g, batch_size=batch_size, fanouts=fanouts,
                          seed=seed, storage_engine=storage_engine,
-                         store=store)
+                         store=store, sampler=sampler,
+                         walk_length=walk_length)
         from repro.core.pipeline import (ProducerConsumerPipeline,
                                          make_host_producer)
         produce = make_host_producer(self.store, batch_size, self.fanouts,
-                                     seed=seed,
+                                     seed=seed, sampler=self.sampler,
+                                     walk_length=self.walk_length,
                                      storage_cost_fn=self.storage_delay)
         self.pipeline = ProducerConsumerPipeline(
             produce, n_workers=n_workers, queue_depth=queue_depth,
@@ -273,10 +349,12 @@ class ISPSubgraphLoader(_LoaderBase):
     dense subgraph crosses the links."""
 
     def __init__(self, g, *, batch_size, fanouts, mesh=None, seed=0,
-                 storage_engine=None, store=None, axis: str = "data"):
+                 storage_engine=None, store=None, sampler="khop",
+                 walk_length=4, axis: str = "data"):
         super().__init__(g, batch_size=batch_size, fanouts=fanouts,
                          seed=seed, storage_engine=storage_engine,
-                         store=store)
+                         store=store, sampler=sampler,
+                         walk_length=walk_length)
         import jax
         import jax.numpy as jnp
         from repro.core.isp import ISPGraph
@@ -321,19 +399,32 @@ class PallasSubgraphLoader(_LoaderBase):
     """Kernel data preparation: the ``neighbor_sample`` Pallas kernel run
     k-hop (HBM edge array, VMEM block staging) composed with the
     ``feature_gather`` row-gather kernel — the paper's ISP firmware loop on
-    the TPU memory hierarchy, feeding real training."""
+    the TPU memory hierarchy, feeding real training.
+
+    With ``device_cache`` (a ``DeviceCacheSpec``) the full feature-table
+    upload is replaced by an HBM-resident ``DeviceFeatureCache``: the
+    batch's unique node ids are resolved against the cache, misses are
+    fetched through the GraphStore (in-memory or real paged DiskStore
+    reads) and admitted by the host-managed policy, and the rows are
+    gathered on-device by the ``feature_gather_cached`` kernel.  Under a
+    ``PrefetchingLoader`` the admission uploads run in the prefetch
+    worker, overlapping the consumer's train step.  Training is
+    bit-identical to the full upload at equal seeds; per-batch
+    hit/miss/eviction counters land in ``Minibatch.trace.io`` next to the
+    host page-cache counters."""
 
     def __init__(self, g, *, batch_size, fanouts, mesh=None, seed=0,
-                 storage_engine=None, store=None):
+                 storage_engine=None, store=None, sampler="khop",
+                 walk_length=4, device_cache=None):
         super().__init__(g, batch_size=batch_size, fanouts=fanouts,
                          seed=seed, storage_engine=storage_engine,
-                         store=store)
+                         store=store, sampler=sampler,
+                         walk_length=walk_length)
         import jax
         import jax.numpy as jnp
         from repro.kernels import ops
         self.indptr = jnp.asarray(g.indptr, jnp.int32)
         self.indices = jnp.asarray(g.indices, jnp.int32)
-        self.features = jnp.asarray(g.features, jnp.float32)
         # labels live on device too: the per-batch gather happens inside
         # the jitted prepare, not via host numpy indexing per call
         self.labels = jnp.asarray(g.labels, jnp.int32)
@@ -345,26 +436,81 @@ class PallasSubgraphLoader(_LoaderBase):
         fanouts_ = self.fanouts
         maxd = self.max_degree
 
-        @jax.jit
-        def prepare(indptr, indices, features, labels, targets, key):
-            hops = ops.sample_khop_kernel(indptr, indices, targets, fanouts_,
-                                          key=key, max_degree=maxd)
-            hop_feats = [ops.feature_gather_rows(features, h) for h in hops]
-            batch_labels = jnp.take(labels, targets)
-            return hops, hop_feats, batch_labels
+        if device_cache is not None and getattr(device_cache, "rows", 0):
+            from repro.storage.devcache import DeviceFeatureCache, pad_pow2
+            self._pad_pow2 = pad_pow2
+            self.features = None        # the whole point: no full upload
+            self.devcache = DeviceFeatureCache(
+                self.store, rows=device_cache.rows,
+                policy=device_cache.policy,
+                pinned_fraction=device_cache.pinned_fraction)
 
-        self._prepare = prepare
+            @jax.jit
+            def sample(indptr, indices, labels, targets, key):
+                hops = ops.sample_khop_kernel(indptr, indices, targets,
+                                              fanouts_, key=key,
+                                              max_degree=maxd)
+                return hops, jnp.take(labels, targets)
+
+            self._sample = sample
+            self._prepare = None
+        else:
+            self.features = jnp.asarray(g.features, jnp.float32)
+
+            @jax.jit
+            def prepare(indptr, indices, features, labels, targets, key):
+                hops = ops.sample_khop_kernel(indptr, indices, targets,
+                                              fanouts_, key=key,
+                                              max_degree=maxd)
+                hop_feats = [ops.feature_gather_rows(features, h)
+                             for h in hops]
+                batch_labels = jnp.take(labels, targets)
+                return hops, hop_feats, batch_labels
+
+            self._prepare = prepare
 
     def get_batch(self, idx: int) -> Minibatch:
         targets = self.targets(idx)
         self.impose_storage_cost(idx)
         key = self._jax.random.fold_in(self._key, idx)
-        hops, hop_feats, labels = self._prepare(self.indptr, self.indices,
-                                                self.features, self.labels,
-                                                self._jnp.asarray(targets),
-                                                key)
+        if self.devcache is None:
+            hops, hop_feats, labels = self._prepare(
+                self.indptr, self.indices, self.features, self.labels,
+                self._jnp.asarray(targets), key)
+            return Minibatch(targets=targets, hop_ids=list(hops),
+                             hop_feats=list(hop_feats), labels=labels)
+        return self._get_batch_cached(targets, key)
+
+    def _get_batch_cached(self, targets, key) -> Minibatch:
+        """Sample on device, resolve the subgraph's unique rows through
+        the device cache, gather on device, index per hop.  The sampling
+        kernel and RNG stream are untouched, and the cache returns the
+        exact float32 rows the full upload would — bit-identity holds."""
+        jnp, np_ = self._jnp, np
+        hops, labels = self._sample(self.indptr, self.indices, self.labels,
+                                    jnp.asarray(targets), key)
+        hop_ids = [np_.asarray(h) for h in hops]
+        io0 = _io_snapshot(self.store)
+        dev0 = self.devcache.counters()
+        uniq = np_.unique(np_.concatenate([h.reshape(-1) for h in hop_ids]))
+        # dispatch-pad the unique set to a power of two (repeating the
+        # last id, so pads are cache hits): U varies every batch, and an
+        # unbucketed width would recompile the downstream take per batch
+        rows = self.devcache.gather_rows(self._pad_pow2(uniq, uniq[-1]),
+                                         n_valid=uniq.size)
+        F = self.devcache.feat_dim
+        hop_feats = []
+        for h in hop_ids:
+            pos = np_.searchsorted(uniq, h.reshape(-1))
+            hop_feats.append(jnp.take(rows, jnp.asarray(pos, jnp.int32),
+                                      axis=0).reshape(h.shape + (F,)))
+        dev1 = self.devcache.counters()
+        io = _io_delta(self.store, io0) or {}
+        io["devcache"] = {k: dev1[k] - dev0[k] for k in dev1}
+        trace = SampleTrace(touched_nodes=np_.empty(0, np_.int64),
+                            hops=hop_ids, subgraph_nodes=uniq, io=io)
         return Minibatch(targets=targets, hop_ids=list(hops),
-                         hop_feats=list(hop_feats), labels=labels)
+                         hop_feats=hop_feats, labels=labels, trace=trace)
 
 
 # ---------------------------------------------------------------------------

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core.loader import Minibatch, batch_targets
 from repro.core.sampler import (DEFAULT_FANOUTS, _io_delta, _io_snapshot,
-                                sample_khop)
+                                sample_khop, saint_random_walk)
 
 
 @dataclasses.dataclass
@@ -46,7 +46,8 @@ class PipelineStats:
 
 
 def make_host_producer(store, batch_size: int, fanouts=DEFAULT_FANOUTS,
-                       *, seed: int = 0,
+                       *, seed: int = 0, sampler: str = "khop",
+                       walk_length: int = 4,
                        storage_cost_fn=None) -> Callable[[int], Minibatch]:
     """Returns produce(batch_idx) -> ``Minibatch`` of numpy arrays.
 
@@ -54,6 +55,11 @@ def make_host_producer(store, batch_size: int, fanouts=DEFAULT_FANOUTS,
     ``InMemoryStore``, or a ``DiskStore``, in which case sampling *and*
     the feature/label gathers are real paged disk reads and the batch's
     trace carries the measured block-I/O counters for the whole span.
+
+    ``sampler`` picks the family: ``'khop'`` fanout expansion or
+    ``'saint'`` GraphSAINT random walks of ``walk_length`` steps (one
+    (M, L+1) hop tensor — the walk — per batch, §VI-F's regular
+    one-neighbor-per-step access pattern).
 
     ``storage_cost_fn(trace) -> seconds`` (optional) models the storage
     tier serving the batch's access trace; the producer sleeps that long,
@@ -64,7 +70,12 @@ def make_host_producer(store, batch_size: int, fanouts=DEFAULT_FANOUTS,
     def produce(batch_idx: int) -> Minibatch:
         targets = batch_targets(store, batch_idx, batch_size, seed)
         io0 = _io_snapshot(store)
-        trace = sample_khop(store, targets, fanouts, seed=seed + batch_idx)
+        if sampler == "saint":
+            trace = saint_random_walk(store, targets, walk_length,
+                                      seed=seed + batch_idx)
+        else:
+            trace = sample_khop(store, targets, fanouts,
+                                seed=seed + batch_idx)
         hop_feats = [store.gather_features(h) for h in trace.hops]
         labels = store.gather_labels(targets)
         # widen the sampler's measured span to cover the feature and label
@@ -168,6 +179,15 @@ class PrefetchingLoader:
         self._expect = idx + 1
         self._prefetched += 1
         return batch
+
+    def start_epoch(self) -> None:
+        """Forward the epoch boundary to the inner loader.  The worker may
+        be up to ``depth`` batches ahead, so per-epoch counters include
+        whatever it has already prefetched — consistent as long as epochs
+        are marked at the same pipeline depth (as the benchmark does)."""
+        mark = getattr(self.inner, "start_epoch", None)
+        if mark is not None:
+            mark()
 
     def stats(self) -> dict:
         times = self._produce_times

@@ -114,3 +114,63 @@ def feature_gather_rows(table, ids, *, tile_m: int = TILE_ROWS,
     out = _gather_call(table, ids.astype(jnp.int32)[:, None], tile_m=tile_m,
                        interpret=interpret)
     return out[:R].astype(table.dtype)
+
+
+# ---------------------------------------------------------------------------
+# cached gather: node-id -> slot indirection into an HBM-resident row cache
+# ---------------------------------------------------------------------------
+
+def _cached_kernel(slots_ref, ids_ref, cache_ref, out_ref, rows_ref, sem,
+                   *, tile_m: int):
+    i = pl.program_id(0)
+
+    def stage(j, carry):
+        # indirection lookup (node id -> cache slot, both scalar-prefetched
+        # /SMEM-resident like the CSR offsets in neighbor_sample), then the
+        # per-row DMA stages the *cache* row — never the full table
+        nid = ids_ref[i * tile_m + j]
+        slot = jnp.maximum(slots_ref[nid], 0)   # -1 = not resident; callers
+        # guarantee residency before dispatch, the clamp only keeps a
+        # misuse from reading out of bounds (bit-identity tests catch it)
+        cp = pltpu.make_async_copy(cache_ref.at[pl.ds(slot, 1), :],
+                                   rows_ref.at[pl.ds(j, 1), :], sem)
+        cp.start()
+        cp.wait()
+        return carry
+
+    jax.lax.fori_loop(0, tile_m, stage, 0)
+    out_ref[...] = rows_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def feature_gather_cached(cache, slot_of, ids, *, tile_m: int = TILE_ROWS,
+                          interpret: bool = True):
+    """cache: (C, F) HBM-resident row cache; slot_of: (N+1,) int32 node-id
+    -> slot indirection table; ids: (R,) int32 node ids, all resident.
+    Returns (R, F) float32.  R is padded up to a tile multiple with edge
+    ids (repeats of the last id — resident by contract), so padding never
+    dereferences an unmapped slot."""
+    R = ids.shape[0]
+    _, F = cache.shape
+    pad = (-R) % tile_m
+    if pad:
+        ids = jnp.pad(ids, (0, pad), mode="edge")
+    kernel = functools.partial(_cached_kernel, tile_m=tile_m)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,                    # slot table, ids
+            grid=((R + pad) // tile_m,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),  # cache stays in HBM
+            ],
+            out_specs=pl.BlockSpec((tile_m, F), lambda i, *_: (i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((tile_m, F), cache.dtype),  # staged row tile
+                pltpu.SemaphoreType.DMA,
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((R + pad, F), jnp.float32),
+        interpret=interpret,
+    )(slot_of.astype(jnp.int32), ids.astype(jnp.int32), cache)
+    return out[:R]

@@ -19,6 +19,7 @@ import numpy as np
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode_pl
 from repro.kernels.flash_attention import flash_attention as _flash_pl
+from repro.kernels.feature_gather import feature_gather_cached as _cached_pl
 from repro.kernels.feature_gather import feature_gather_mean as _gather_pl
 from repro.kernels.feature_gather import feature_gather_rows as _rows_pl
 from repro.kernels.neighbor_sample import neighbor_sample as _sample_pl
@@ -88,6 +89,23 @@ def feature_gather_rows(table, ids):
     else:
         out = _rows_pl(table, flat, interpret=_interpret())
     return out.reshape(ids.shape + (F,)).astype(table.dtype)
+
+
+def feature_gather_cached(cache, slot_of, ids):
+    """(C, F) HBM row cache, (N+1,) int32 slot table, ids (...,) int32 ->
+    (..., F): the device-cache read path — indirection lookup + tiled row
+    gather in one pallas_call.  Every id must be resident (slot != -1);
+    ``storage.devcache.DeviceFeatureCache`` guarantees that by resolving
+    misses before dispatch."""
+    F = cache.shape[1]
+    flat = ids.reshape(-1).astype(jnp.int32)
+    if flat.shape[0] == 0:
+        return jnp.zeros(ids.shape + (F,), cache.dtype)
+    if not _ENABLED:
+        out = ref.feature_gather_cached(cache, slot_of, flat)
+    else:
+        out = _cached_pl(cache, slot_of, flat, interpret=_interpret())
+    return out.reshape(ids.shape + (F,)).astype(cache.dtype)
 
 
 def decode_attention(q, k, v, valid_len, window=0, *, block_s: int = 512):

@@ -24,6 +24,15 @@ def feature_gather_mean(table, ids):
     return rows.mean(axis=1).astype(table.dtype)
 
 
+def feature_gather_cached(cache, slot_of, ids):
+    """cache: (C, F); slot_of: (N+1,) int32 node->slot indirection;
+    ids: (R,) int32 resident node ids -> (R, F) gathered cache rows.
+    Unresolved slots (-1) clamp to slot 0, matching the kernel's
+    out-of-bounds guard."""
+    slots = jnp.take(slot_of, ids)
+    return jnp.take(cache, jnp.maximum(slots, 0), axis=0)
+
+
 def neighbor_sample(indptr, indices, targets, rand):
     """CSR fanout sampling with explicit randomness.
 

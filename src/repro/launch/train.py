@@ -52,10 +52,28 @@ def _parse():
                     choices=("lru", "pinned"),
                     help="disk-store placement: OS-page-cache-style LRU "
                          "or §IV-C hot-block pinning + LRU spill")
+    ap.add_argument("--lock-shards", type=int, default=None,
+                    help="disk-store page-cache lock shards (default: "
+                         "storage spec; 1 = single global lock)")
     ap.add_argument("--store-dir", default=None,
                     help="directory for the on-disk graph layout "
                          "(default: a fresh temp dir; reused if it "
                          "already holds a manifest)")
+    ap.add_argument("--device-cache-rows", type=int, default=0,
+                    help="pallas backend: HBM feature-cache capacity in "
+                         "rows (0 = full-table upload).  Set below the "
+                         "unique-rows-per-batch working set to exercise "
+                         "the device-side out-of-core path; training "
+                         "stays bit-identical to the full upload")
+    ap.add_argument("--device-cache-policy", default="pinned",
+                    choices=("lru", "pinned"),
+                    help="device cache placement: LRU recency or "
+                         "degree-pinned hot set + LRU spill (default)")
+    ap.add_argument("--sampler", default="khop", choices=("khop", "saint"),
+                    help="sampler family: GraphSAGE k-hop fanouts or "
+                         "GraphSAINT random walks (host backend only)")
+    ap.add_argument("--walk-length", type=int, default=4,
+                    help="GraphSAINT walk length (--sampler saint)")
     ap.add_argument("--dataset", default="reddit")
     ap.add_argument("--large-scale", action="store_true")
     ap.add_argument("--steps", type=int, default=50)
@@ -112,14 +130,36 @@ def run_gnn(args, mesh):
     from repro.distributed.sharding import ShardingRules
     from repro.optim import adamw
 
-    fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    if args.sampler == "saint":
+        if args.backend != "host":
+            raise SystemExit("[train] --sampler saint is host-backend only "
+                             "(numpy random walks)")
+        # one hop tensor = the whole (M, L+1) walk -> 1-layer GraphSAGE
+        fanouts = (args.walk_length + 1,)
+    else:
+        fanouts = tuple(int(x) for x in args.fanouts.split(","))
     g = load_dataset(args.dataset, large_scale=args.large_scale)
     store = None
     store_tmpdir = None
-    if args.graph_store == "disk" and args.backend != "host":
-        print("[train] note: --graph-store disk applies to the host "
-              "backend only (device backends keep device-resident "
-              "copies); proceeding in-memory")
+    device_cache = None
+    if args.device_cache_rows:
+        if args.backend != "pallas":
+            raise SystemExit("[train] --device-cache-rows applies to the "
+                             "pallas backend only")
+        from repro.storage import DeviceCacheSpec
+        device_cache = DeviceCacheSpec(rows=args.device_cache_rows,
+                                       policy=args.device_cache_policy)
+    if args.graph_store == "disk" and args.backend == "isp":
+        print("[train] note: --graph-store disk does not apply to the isp "
+              "backend (mesh shards are device-resident); proceeding "
+              "in-memory")
+    elif (args.graph_store == "disk" and args.backend == "pallas"
+            and device_cache is None):
+        # without a device cache nothing on the pallas path reads through
+        # the store — don't serialize the graph as dead work
+        print("[train] note: pallas@disk needs --device-cache-rows to "
+              "read features through the store; proceeding in-memory "
+              "(full feature-table upload)")
     elif args.graph_store == "disk":
         import tempfile
 
@@ -130,12 +170,13 @@ def run_gnn(args, mesh):
             store_tmpdir = store_dir       # ours to remove at exit
         store = open_store("disk", g=g, path=store_dir,
                            cache_mb=args.cache_mb,
-                           policy=args.cache_policy)
+                           policy=args.cache_policy,
+                           lock_shards=args.lock_shards)
         print(f"[train] graph store: disk at {store_dir} "
               f"({store.nbytes_on_disk() / 2**20:.1f} MB on disk, "
               f"page cache {store.cache_blocks} x {store.block_bytes} B "
               f"= {store.cache_blocks * store.block_bytes / 2**20:.1f} MB, "
-              f"policy={store.policy})")
+              f"policy={store.policy}, lock_shards={store.lock_shards})")
     engine = None
     if args.storage_engine and args.storage_engine != "none":
         from repro.storage import make_engine
@@ -143,11 +184,15 @@ def run_gnn(args, mesh):
                              measured=store is not None, store=store)
     loader = make_loader(args.backend, g, batch_size=args.batch,
                          fanouts=fanouts, mesh=mesh, storage_engine=engine,
-                         prefetch=args.prefetch, store=store)
+                         prefetch=args.prefetch, store=store,
+                         sampler=args.sampler, walk_length=args.walk_length,
+                         device_cache=device_cache)
     print(f"[train] {g.name}: {g.num_nodes} nodes {g.num_edges} edges, "
-          f"backend={args.backend}"
+          f"backend={args.backend}, sampler={args.sampler}"
           + (f", storage={args.storage_engine}" if engine else "")
-          + (f", prefetch={args.prefetch}" if args.prefetch else ""))
+          + (f", prefetch={args.prefetch}" if args.prefetch else "")
+          + (f", devcache={args.device_cache_rows} rows "
+             f"({args.device_cache_policy})" if device_cache else ""))
 
     cfg = GNNConfig(feat_dim=g.feat_dim, hidden=args.hidden,
                     n_classes=int(g.labels.max()) + 1, fanouts=fanouts)
@@ -188,9 +233,17 @@ def run_gnn(args, mesh):
         if saver:
             saver.save_async(args.steps, state)
             saver.wait()
+        loader_stats = loader.stats()
         print(f"[train] {stats.steps} steps in {stats.wall_s:.1f}s "
               f"({stats.steps_per_s:.2f} steps/s, consumer idle "
-              f"{stats.idle_fraction:.1%}) loader={loader.stats()}")
+              f"{stats.idle_fraction:.1%}) loader={loader_stats}")
+        dc = loader_stats.get("devcache")
+        if dc:
+            print(f"[train] device cache: {dc['capacity_rows']} rows "
+                  f"({dc['policy']}, {dc['pinned_rows']} pinned), "
+                  f"hits={dc['hits']} misses={dc['misses']} "
+                  f"evictions={dc['evictions']} "
+                  f"({dc['bytes_uploaded'] / 2**20:.1f} MB uploaded)")
         if store is not None:
             io = store.io_counters()
             print(f"[train] disk-store I/O: {io['requests']} requests, "

@@ -3,7 +3,9 @@ simulator that replays real sampler traces against device models of the
 paper's six design points (DESIGN.md §2)."""
 
 from repro.storage.blockdev import (EDGE_ENTRY_BYTES, BlockTrace, LRUCache,
-                                    PinnedCache, block_trace)
+                                    PinnedCache, block_trace,
+                                    select_pinned_blocks)
+from repro.storage.devcache import DeviceFeatureCache
 from repro.storage.e2e import (E2EResult, capacity_report, e2e_train,
                                feature_gather_time, gnn_step_flops,
                                gpu_step_time)
@@ -12,6 +14,6 @@ from repro.storage.engines import (ENGINES, BatchCost, DirectIOEngine,
                                    ISPOracleEngine, MeasuredEngine,
                                    MmapSSDEngine, PMEMEngine, StorageEngine,
                                    make_engine, throughput)
-from repro.storage.specs import DEFAULT, SystemSpec
+from repro.storage.specs import DEFAULT, DeviceCacheSpec, SystemSpec
 from repro.storage.store import (DiskStore, GraphStore, InMemoryStore,
                                  open_store, save_graph)

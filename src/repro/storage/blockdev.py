@@ -108,48 +108,87 @@ class LRUCache:
         self.misses += 1
         return None
 
-    def put(self, block: int, payload) -> None:
-        """Insert a fetched block's payload, evicting the LRU block."""
+    def peek(self, block: int):
+        """Payload if resident (touches recency, no counters) — the
+        post-fetch re-check of the sharded read path, where the fetch
+        itself already counted."""
+        od = self._od
+        if block in od:
+            od.move_to_end(block)
+            return od[block]
+        return None
+
+    def put(self, block: int, payload) -> tuple[int, object] | None:
+        """Insert a fetched block's payload, evicting the LRU block.
+
+        Returns the evicted ``(block, payload)`` pair, or None if nothing
+        was displaced — callers that recycle backing slots (the device
+        feature cache) reuse the victim's payload as the new resident's
+        slot."""
         od = self._od
         od[block] = payload
         od.move_to_end(block)
         if len(od) > self.capacity:
-            od.popitem(last=False)
+            evicted = od.popitem(last=False)
             self.evictions += 1
+            return evicted
+        return None
 
     def counters(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions}
 
 
+def select_pinned_blocks(g, budget_blocks: int, block_bytes: int = 4096,
+                         entry_bytes: int = EDGE_ENTRY_BYTES
+                         ) -> dict[int, object]:
+    """Greedy hottest-first pinning: walk nodes in descending degree and
+    claim each one's blocks until ``budget_blocks`` is exhausted.  Heat =
+    node degree — in GraphSAGE sampling the probability a node's neighbor
+    list is read at hop t>0 is proportional to its in-degree, so hub
+    blocks dominate the power-law request stream.  ``g`` needs
+    ``degrees()`` and ``edge_byte_range(u, entry_bytes)``.  Returns
+    ``{block_id: None}`` (payloads staged later)."""
+    heat_order = np.argsort(-g.degrees())
+    pinned: dict[int, object] = {}
+    for u in heat_order:
+        lo, hi = g.edge_byte_range(int(u), entry_bytes)
+        blocks = range(lo // block_bytes, max(hi - 1, lo) // block_bytes + 1)
+        if len(pinned) + len(blocks) > budget_blocks:
+            break
+        pinned.update((b, None) for b in blocks)
+    return pinned
+
+
 class PinnedCache:
-    """User-space scratchpad: half the capacity statically *pins* the
-    hottest blocks (heat = node degree — in GraphSAGE sampling the
-    probability a node's neighbor list is read at hop t>0 is proportional
-    to its in-degree, so hub blocks dominate the power-law request
-    stream), the other half is an app-managed LRU for short-term reuse.
-    This is the "manually orchestrate high-locality data movements"
-    runtime of §IV-C: same DRAM budget as a page cache, but informed
-    placement and no kernel maintenance costs.
+    """User-space scratchpad: part of the capacity (half by default)
+    statically *pins* the hottest blocks, the rest is an app-managed LRU
+    for short-term reuse.  This is the "manually orchestrate
+    high-locality data movements" runtime of §IV-C: same DRAM budget as a
+    page cache, but informed placement and no kernel maintenance costs.
     """
 
     def __init__(self, g, capacity_blocks: int, block_bytes: int = 4096,
-                 entry_bytes: int = EDGE_ENTRY_BYTES):
+                 entry_bytes: int = EDGE_ENTRY_BYTES,
+                 pinned_budget: int | None = None):
         """``g`` needs ``degrees()`` and ``edge_byte_range(u, entry_bytes)``
         — a ``CSRGraph`` or any store exposing the same index (the live
-        ``DiskStore`` passes a view over its in-memory ``indptr``)."""
+        ``DiskStore`` passes a view over its in-memory ``indptr``).
+
+        ``pinned_budget`` caps how many blocks may be pinned (default:
+        half the capacity).  A budget exceeding the capacity raises —
+        pins are never silently evicted to make room."""
         capacity_blocks = max(2, int(capacity_blocks))
-        heat_order = np.argsort(-g.degrees())
-        pinned: dict[int, object] = {}
-        budget = capacity_blocks // 2
-        for u in heat_order:
-            lo, hi = g.edge_byte_range(int(u), entry_bytes)
-            blocks = range(lo // block_bytes, max(hi - 1, lo) // block_bytes + 1)
-            if len(pinned) + len(blocks) > budget:
-                break
-            pinned.update((b, None) for b in blocks)
-        self._pinned = pinned
-        self._lru = LRUCache(capacity_blocks - len(pinned))
+        if pinned_budget is None:
+            pinned_budget = capacity_blocks // 2
+        if pinned_budget > capacity_blocks:
+            raise ValueError(
+                f"pinned budget {pinned_budget} exceeds cache capacity "
+                f"{capacity_blocks} blocks; pins are never evicted, so "
+                "shrink the pinned set or grow the cache")
+        self._pinned = select_pinned_blocks(g, pinned_budget, block_bytes,
+                                            entry_bytes)
+        self._lru = LRUCache(capacity_blocks - len(self._pinned))
         self._pinned_hits = 0
 
     def access(self, block: int) -> bool:
@@ -175,11 +214,11 @@ class PinnedCache:
             return None
         return self._lru.get(block)
 
-    def put(self, block: int, payload) -> None:
+    def put(self, block: int, payload) -> tuple[int, object] | None:
         if block in self._pinned:
             self._pinned[block] = payload
-        else:
-            self._lru.put(block, payload)
+            return None                          # pins never displace
+        return self._lru.put(block, payload)
 
     @property
     def hits(self) -> int:

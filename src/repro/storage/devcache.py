@@ -1,0 +1,280 @@
+"""Device-resident feature cache: the HBM analogue of the DiskStore's
+page cache.
+
+The pallas data plane used to upload the **entire** feature table to
+device memory at init, so the device path could not train beyond HBM
+capacity.  ``DeviceFeatureCache`` makes the device backend a real
+out-of-core tier: a fixed-capacity ``(C, F)`` HBM-resident row cache plus
+a device-side ``node_id -> slot`` indirection table, with host-managed
+admission/eviction reusing the ``LRUCache``/``PinnedCache`` policy
+machinery from ``storage.blockdev`` (the same policies the host page
+cache runs — DRAM-over-SSD and HBM-over-host are two instances of one
+design).  The default policy pins the hottest-degree rows, per the
+paper's skewed-access characterization: hub rows dominate the gather
+stream in power-law graphs.
+
+Read path (``gather_rows``): a batch's unique node ids are resolved
+against the host mirror — hits only touch recency; misses are batched,
+fetched through the backing ``GraphStore`` (in-memory arrays **or** real
+paged ``DiskStore`` reads), and written into victim slots by one
+jit-compiled scatter (host->device copies that, under a
+``PrefetchingLoader``, run in the prefetch worker and overlap the
+consumer's compute).  The rows are then gathered **on device** by the
+``feature_gather_cached`` Pallas kernel (indirection lookup + tiled row
+gather) — the full table never crosses to the device.
+
+Residency contract: ids are resolved in segments whose non-pinned count
+never exceeds the LRU capacity.  Touched rows land at the MRU end and
+installs evict strictly from the LRU end, so by the time a segment is
+dispatched every one of its rows is resident — even when the batch's
+working set exceeds the whole cache (the segments are resolved and
+gathered in order).  Bit-identity: rows cross host->device with
+unchanged float32 bits and the scatter/gather path copies them verbatim,
+so cached training matches full-upload training exactly at equal seeds.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+
+import numpy as np
+
+from repro.storage.blockdev import LRUCache, PinnedCache
+from repro.storage.specs import DEFAULT, DeviceCacheSpec
+
+
+def pad_pow2(arr: np.ndarray, fill) -> np.ndarray:
+    """Pad a 1-D/2-D array's leading dim up to the next power of two with
+    ``fill`` rows — the shared recompile-bounding bucketing: dispatch and
+    scatter widths vary batch to batch, and unbucketed shapes would
+    compile one kernel per distinct length."""
+    n = arr.shape[0]
+    width = 1 << (n - 1).bit_length()
+    if width == n:
+        return arr
+    pad = np.broadcast_to(fill, (width - n,) + arr.shape[1:])
+    return np.concatenate([arr, pad])
+
+
+class _RowHeatIndex:
+    """Adapter presenting feature *rows* as unit blocks to the
+    ``PinnedCache`` selection machinery: with ``block_bytes=1`` and byte
+    range ``[u, u+1)``, node u's "block" is exactly its row id, and the
+    degree-ordered greedy pinning picks the hottest rows."""
+
+    def __init__(self, store):
+        self._store = store
+
+    def degrees(self) -> np.ndarray:
+        return self._store.degrees()
+
+    def edge_byte_range(self, u: int, entry_bytes: int) -> tuple[int, int]:
+        return (u, u + 1)
+
+
+class DeviceFeatureCache:
+    """HBM-resident hot-row cache over a ``GraphStore`` feature table."""
+
+    def __init__(self, backing, *, rows: int | None = None,
+                 policy: str | None = None,
+                 pinned_fraction: float | None = None,
+                 spec: DeviceCacheSpec = DEFAULT.devcache):
+        """``backing`` is anything with ``num_nodes`` / ``feat_dim`` /
+        ``degrees()`` / ``gather_features(ids)`` — a ``CSRGraph``, an
+        ``InMemoryStore``, or a ``DiskStore`` (then every miss is a real
+        paged disk read and shows up in the store's I/O counters)."""
+        import jax
+        import jax.numpy as jnp
+        from repro.kernels import ops
+
+        self.backing = backing
+        self.capacity = int(spec.rows if rows is None else rows)
+        self.policy = policy or spec.policy
+        if self.policy not in ("lru", "pinned"):
+            raise ValueError(f"unknown device-cache policy {self.policy!r};"
+                             " have ('lru', 'pinned')")
+        if self.capacity < 1:
+            raise ValueError("device cache needs at least one row")
+        frac = (spec.pinned_fraction if pinned_fraction is None
+                else pinned_fraction)
+        n = int(backing.num_nodes)
+        F = int(backing.feat_dim)
+        self.num_nodes, self.feat_dim = n, F
+        self._jnp = jnp
+        self._ops = ops
+        self._lock = threading.Lock()
+        self.hits = self.misses = self.evictions = 0
+        self.preload_rows = 0
+        self.bytes_uploaded = 0
+
+        if self.policy == "pinned":
+            if self.capacity < 2:
+                raise ValueError("pinned policy needs capacity >= 2 rows "
+                                 "(use policy='lru' for degenerate caches)")
+            pin_budget = int(round(self.capacity * frac))
+            # raises if pin_budget > capacity: pins are never evicted
+            self._mirror = PinnedCache(_RowHeatIndex(backing), self.capacity,
+                                       block_bytes=1, entry_bytes=1,
+                                       pinned_budget=pin_budget)
+            self._pinned_ids = frozenset(self._mirror._pinned)
+            self._lru_rows = self.capacity - len(self._pinned_ids)
+        else:
+            self._mirror = LRUCache(self.capacity)
+            self._pinned_ids = frozenset()
+            self._lru_rows = self.capacity
+        if self._lru_rows < 1:
+            raise ValueError(
+                f"pinned set ({len(self._pinned_ids)} rows) leaves no LRU "
+                f"slots in a {self.capacity}-row cache; lower "
+                "pinned_fraction or grow the cache")
+
+        self._free = list(range(self.capacity - 1, -1, -1))
+        # +1 entry: index n is the scatter-padding sentinel, never queried
+        self.slot_of = jnp.full((n + 1,), -1, jnp.int32)
+        self.table = jnp.zeros((self.capacity, F), jnp.float32)
+        donate = (0, 1) if jax.default_backend() == "tpu" else ()
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def _update(table, slot_of, slots, rows, evict_ids, new_ids):
+            table = table.at[slots].set(rows)
+            slot_of = slot_of.at[evict_ids].set(-1)
+            slot_of = slot_of.at[new_ids].set(slots)
+            return table, slot_of
+
+        self._update = _update
+        if self._pinned_ids:
+            self._preload_pinned()
+
+    # -- admission / eviction (host-managed) --------------------------------
+    def _preload_pinned(self) -> None:
+        """Stage the pinned hot rows eagerly (the §IV-C runtime stages its
+        scratchpad before training starts).  The fetches are real backing
+        reads but count as ``preload_rows``, not misses."""
+        with self._lock:
+            self._resolve(np.fromiter(sorted(self._pinned_ids), np.int64))
+            self.preload_rows = self.misses
+            self.hits = self.misses = self.evictions = 0
+
+    def _segments(self, ids: np.ndarray):
+        """Split ``ids`` (order preserved) so each segment's non-pinned
+        count fits the LRU capacity — the residency contract: a segment's
+        installs can then only evict rows outside the segment (or rows of
+        it not yet touched, which simply re-miss), never a row between
+        its resolution and its gather."""
+        budget = self._lru_rows
+        start = used = 0
+        for k, u in enumerate(ids):
+            cost = 0 if int(u) in self._pinned_ids else 1
+            if used + cost > budget:
+                yield ids[start:k]
+                start, used = k, 0
+            used += cost
+        yield ids[start:]
+
+    def _resolve(self, seg: np.ndarray, counted: int | None = None) -> None:
+        """Make every id in ``seg`` resident: touch hits for recency,
+        batch-fetch misses from the backing store, install them into free
+        or victim slots, and push one scatter update to the device.
+
+        Only the first ``counted`` ids contribute to the hit/miss
+        counters (default: all) — positions beyond that are dispatch
+        filler, kept resident for the kernel but excluded from the
+        metrics so reported hit rates reflect real requests only."""
+        if counted is None:
+            counted = seg.size
+        miss_ids: list[int] = []
+        miss_slots: list[int] = []
+        evict_ids: list[int] = []
+        n_miss = n_evict = 0
+        for k, u in enumerate(seg):
+            u = int(u)
+            slot = self._mirror.get(u)
+            if slot is not None:
+                if k < counted:
+                    self.hits += 1
+                continue
+            evicted = self._mirror.put(u, -1)
+            if evicted is None:
+                slot = self._free.pop()
+            else:
+                victim, slot = evicted
+                evict_ids.append(victim)
+                if k < counted:
+                    n_evict += 1
+            self._mirror.put(u, slot)       # u present: fixes the payload
+            miss_ids.append(u)
+            miss_slots.append(slot)
+            if k < counted:
+                n_miss += 1
+        self.misses += n_miss
+        self.evictions += n_evict
+        if not miss_ids:
+            return
+        rows = np.ascontiguousarray(
+            self.backing.gather_features(np.asarray(miss_ids, np.int64)),
+            np.float32)
+        self._push(miss_ids, miss_slots, evict_ids, rows)
+
+    def _push(self, miss_ids, miss_slots, evict_ids, rows) -> None:
+        """One jitted scatter installs the fetched rows and repairs the
+        indirection table.  Update lengths are padded to powers of two
+        (pad rows rewrite the last slot, pad ids hit the sentinel entry)
+        so retracing stays bounded across batch-to-batch miss counts."""
+        jnp = self._jnp
+        m = len(miss_ids)
+        width = 1 << (m - 1).bit_length()
+        sent = self.num_nodes
+        slots = pad_pow2(np.asarray(miss_slots, np.int32), miss_slots[-1])
+        new_ids = pad_pow2(np.asarray(miss_ids, np.int32), sent)
+        ev = np.asarray(evict_ids + [sent] * (width - len(evict_ids)),
+                        np.int32)
+        rows = pad_pow2(rows, rows[-1])
+        self.table, self.slot_of = self._update(
+            self.table, self.slot_of, jnp.asarray(slots), jnp.asarray(rows),
+            jnp.asarray(ev), jnp.asarray(new_ids))
+        self.bytes_uploaded += int(m) * self.feat_dim * 4
+
+    # -- read path -----------------------------------------------------------
+    def gather_rows(self, ids: np.ndarray, n_valid: int | None = None):
+        """ids: (U,) host node ids -> (U, F) float32 device array, gathered
+        on-device through the cache; misses are admitted along the way.
+        Works for any U, including U > capacity (segmented residency).
+
+        ``n_valid`` marks trailing ids as dispatch padding (the loader's
+        pow2 bucketing): they are resolved and gathered like any other
+        id but excluded from the hit/miss/eviction counters."""
+        jnp = self._jnp
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        if ids.size == 0:
+            return jnp.zeros((0, self.feat_dim), jnp.float32)
+        nv = ids.size if n_valid is None else int(n_valid)
+        offset = 0
+        parts = []
+        with self._lock:
+            for seg in self._segments(ids):
+                if seg.size == 0:
+                    continue
+                self._resolve(seg, counted=max(0, min(seg.size,
+                                                      nv - offset)))
+                offset += seg.size
+                # pad the dispatch length with a resident id so the
+                # kernel's compiled-shape count stays logarithmic
+                n = seg.size
+                seg = pad_pow2(seg, seg[-1])
+                parts.append(self._ops.feature_gather_cached(
+                    self.table, self.slot_of,
+                    jnp.asarray(seg, jnp.int32))[:n])
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
+    # -- accounting ----------------------------------------------------------
+    def counters(self) -> dict:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "preload_rows": self.preload_rows,
+                    "bytes_uploaded": self.bytes_uploaded}
+
+    def stats(self) -> dict:
+        return {"policy": self.policy, "capacity_rows": self.capacity,
+                "pinned_rows": len(self._pinned_ids), **self.counters()}

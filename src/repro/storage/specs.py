@@ -82,10 +82,28 @@ class DiskStoreSpec:
     opposed to the simulated engines above): the on-disk layout is
     block-aligned at ``block_bytes`` and reads go through a page cache of
     ``cache_mb`` under the ``policy`` placement rule ('lru' = OS-page-cache
-    style recency, 'pinned' = §IV-C hot-block pinning + LRU spill)."""
+    style recency, 'pinned' = §IV-C hot-block pinning + LRU spill).  The
+    page cache is split into ``lock_shards`` hashed-block shards so
+    concurrent producer workers don't serialize on one lock (the engines'
+    shared-resource contention model, Fig. 17)."""
     block_bytes: int = 4096
     cache_mb: float = 16.0
     policy: str = "lru"
+    lock_shards: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceCacheSpec:
+    """HBM-resident feature-row cache for the pallas backend
+    (``storage.devcache.DeviceFeatureCache``): ``rows`` is the fixed
+    device-side capacity in feature rows (0 = disabled, full-table
+    upload); ``policy`` picks the host-managed placement — 'lru'
+    recency, or 'pinned' with the hottest-degree ``pinned_fraction`` of
+    the capacity staged permanently (the paper's skewed-access
+    characterization: hub rows dominate the gather stream)."""
+    rows: int = 4096
+    policy: str = "pinned"
+    pinned_fraction: float = 0.5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +114,7 @@ class SystemSpec:
     fpga: FPGASpec = FPGASpec()
     pmem: PMEMSpec = PMEMSpec()
     diskstore: DiskStoreSpec = DiskStoreSpec()
+    devcache: DeviceCacheSpec = DeviceCacheSpec()
     dram_capacity: int = 192 << 30  # paper host DRAM
     # fraction of the edge-list array that fits in the OS page cache /
     # user scratchpad for LARGE-scale datasets (paper: working set >> DRAM;

@@ -39,7 +39,7 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.graph import CSRGraph
-from repro.storage.blockdev import LRUCache, PinnedCache
+from repro.storage.blockdev import LRUCache, select_pinned_blocks
 from repro.storage.specs import DEFAULT, SystemSpec
 
 MANIFEST = "manifest.json"
@@ -198,21 +198,27 @@ class DiskStore:
     page cache.
 
     Every access method resolves to byte ranges in the backing files,
-    fetched in ``block_bytes`` units through one cache shared by all
-    arrays (block IDs are namespaced per file).  ``policy='lru'`` models
-    the OS page cache; ``policy='pinned'`` is the paper's §IV-C
+    fetched in ``block_bytes`` units through one cache budget shared by
+    all arrays (block IDs are namespaced per file).  ``policy='lru'``
+    models the OS page cache; ``policy='pinned'`` is the paper's §IV-C
     user-space scratchpad — half the budget statically pins the
     hottest (highest-degree) edge blocks, preloaded at open, the rest is
     LRU.  Counters (``io_counters``) record requests, block fetches,
-    bytes fetched from disk, and the cache's hits/misses/evictions;
-    they are cumulative and thread-safe (producer workers share the
-    store under one lock).
+    bytes fetched from disk, and the cache's hits/misses/evictions.
+
+    Concurrency: the LRU budget is split into ``lock_shards``
+    hashed-block shards, each behind its own lock, so concurrent
+    producer workers only contend when they touch the same shard (the
+    engines' shared-resource contention model, Fig. 17; the
+    ``--contention-workers`` micro-benchmark measures the scaling).  The
+    pinned set is immutable after the preload and served lock-free.
     """
 
     kind = "disk"
 
     def __init__(self, path: str, *, cache_mb: float | None = None,
                  policy: str | None = None, cache_blocks: int | None = None,
+                 lock_shards: int | None = None,
                  spec: SystemSpec = DEFAULT):
         self.path = path
         with open(os.path.join(path, MANIFEST)) as f:
@@ -247,18 +253,30 @@ class DiskStore:
             cache_blocks = max(4, int(self.cache_mb * (1 << 20))
                                // self.block_bytes)
         self.cache_blocks = int(cache_blocks)
-        self._lock = threading.Lock()
+        self._stat_lock = threading.Lock()
         self._tls = threading.local()
         self._requests = 0
         self._block_fetches = 0
         self._bytes_fetched = 0
+        self._pinned_hits = 0
         if self.policy == "pinned":
-            self._cache = PinnedCache(
-                _EdgeBlockIndex(self), self.cache_blocks, self.block_bytes,
+            self._pinned = select_pinned_blocks(
+                _EdgeBlockIndex(self), self.cache_blocks // 2,
+                self.block_bytes,
                 entry_bytes=self._dtype["indices"].itemsize)
-            self._preload_pinned()
         else:
-            self._cache = LRUCache(self.cache_blocks)
+            self._pinned = {}
+        lru_blocks = self.cache_blocks - len(self._pinned)
+        shards = (spec.diskstore.lock_shards if lock_shards is None
+                  else int(lock_shards))
+        shards = max(1, min(shards, lru_blocks))
+        per = [lru_blocks // shards + (1 if i < lru_blocks % shards else 0)
+               for i in range(shards)]
+        self._shards = [LRUCache(max(1, c)) for c in per]
+        self._locks = [threading.Lock() for _ in range(shards)]
+        self.lock_shards = shards
+        if self._pinned:
+            self._preload_pinned()
 
     # -- sizes ---------------------------------------------------------------
     @property
@@ -310,33 +328,53 @@ class DiskStore:
         return c
 
     def _read_range(self, key: str, lo: int, hi: int) -> bytes:
-        """Bytes [lo, hi) of array ``key``, block-granular via the cache."""
+        """Bytes [lo, hi) of array ``key``, block-granular via the cache.
+        Each block locks only its hash shard, so concurrent producers
+        reading different blocks proceed in parallel."""
         if hi <= lo:
             return b""
         B = self.block_bytes
         first, last = lo // B, (hi - 1) // B
         ns = self._ns[key] * _NS_STRIDE
-        hits = misses = nbytes = 0
-        with self._lock:
-            ev0 = self._cache.evictions
-            parts = []
-            for blk in range(first, last + 1):
-                data = self._cache.get(ns + blk)
-                if data is None:
-                    data = self._fetch(key, blk)
-                    self._cache.put(ns + blk, data)
-                    misses += 1
-                    nbytes += len(data)
-                else:
-                    hits += 1
+        hits = misses = nbytes = evictions = pinned_hits = 0
+        parts = []
+        for blk in range(first, last + 1):
+            bid = ns + blk
+            data = self._pinned.get(bid)
+            if data is not None:        # immutable after preload: lock-free
+                pinned_hits += 1
                 parts.append(data)
+                continue
+            s = bid % self.lock_shards
+            shard = self._shards[s]
+            lock = self._locks[s]
+            with lock:
+                data = shard.get(bid)
+            if data is None:
+                # fetch outside the lock: misses on unrelated blocks that
+                # hash to the same shard must not serialize on disk I/O
+                payload = self._fetch(key, blk)
+                misses += 1
+                nbytes += len(payload)
+                with lock:
+                    # a racing fetch of the same block may have inserted
+                    # first; keep its copy (both fetches are counted)
+                    data = shard.peek(bid)
+                    if data is None:
+                        if shard.put(bid, payload) is not None:
+                            evictions += 1
+                        data = payload
+            else:
+                hits += 1
+            parts.append(data)
+        with self._stat_lock:
             self._requests += 1
             self._block_fetches += misses
             self._bytes_fetched += nbytes
-            evictions = self._cache.evictions - ev0
+            self._pinned_hits += pinned_hits
         t = self._thread_counters()     # per-thread: exact per-batch deltas
         t["requests"] += 1
-        t["hits"] += hits
+        t["hits"] += hits + pinned_hits
         t["misses"] += misses
         t["block_fetches"] += misses
         t["bytes_fetched"] += nbytes
@@ -355,11 +393,13 @@ class DiskStore:
     def _preload_pinned(self) -> None:
         """Load the pinned hot blocks' payloads eagerly (the §IV-C runtime
         stages its scratchpad before training starts).  The staging reads
-        count as block fetches — they are real disk I/O."""
+        count as block fetches — they are real disk I/O.  After this the
+        pinned dict is never mutated, which is what makes the lock-free
+        read in ``_read_range`` safe."""
         ns = self._ns["indices"] * _NS_STRIDE
-        for blk in sorted(self._cache._pinned):
+        for blk in sorted(self._pinned):
             data = self._fetch("indices", blk - ns)
-            self._cache.put(blk, data)
+            self._pinned[blk] = data
             self._block_fetches += 1
             self._bytes_fetched += len(data)
 
@@ -409,11 +449,18 @@ class DiskStore:
 
     # -- accounting ----------------------------------------------------------
     def io_counters(self) -> dict:
-        with self._lock:     # consistent snapshot vs. in-flight reads
-            c = self._cache.counters()
+        hits = misses = evictions = 0
+        for shard, lock in zip(self._shards, self._locks):
+            with lock:      # per-shard-consistent vs. in-flight reads
+                hits += shard.hits
+                misses += shard.misses
+                evictions += shard.evictions
+        with self._stat_lock:
             return {"requests": self._requests,
                     "block_fetches": self._block_fetches,
-                    "bytes_fetched": self._bytes_fetched, **c}
+                    "bytes_fetched": self._bytes_fetched,
+                    "hits": hits + self._pinned_hits, "misses": misses,
+                    "evictions": evictions}
 
     def thread_io_counters(self) -> dict:
         """This thread's share of the I/O.  A minibatch is produced
@@ -426,6 +473,7 @@ class DiskStore:
         return {"kind": self.kind, "policy": self.policy,
                 "cache_mb": self.cache_mb,
                 "cache_blocks": self.cache_blocks,
+                "lock_shards": self.lock_shards,
                 "nbytes_on_disk": self.nbytes_on_disk(),
                 **self.io_counters()}
 

@@ -1,0 +1,386 @@
+"""Device feature cache: residency/bit-identity of the HBM hot-row cache,
+cache-policy edge cases shared with the host caches, the GraphSAINT
+sampler family, per-epoch counters, and the sharded DiskStore lock."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GNNConfig, GraphSAGE, build_train_step, make_loader,
+                        train_loop)
+from repro.optim import adamw
+from repro.storage import (DeviceCacheSpec, DeviceFeatureCache, DiskStore,
+                           LRUCache, PinnedCache, save_graph)
+
+FANOUTS = (3, 2)
+BATCH = 8
+
+
+@pytest.fixture(scope="module")
+def disk_dir(small_graph, tmp_path_factory):
+    path = tmp_path_factory.mktemp("graphstore-dev")
+    save_graph(small_graph, str(path))
+    return str(path)
+
+
+# ---------------------------------------------------------------------------
+# DeviceFeatureCache core: residency + bit-identity of gathered rows
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,rows", [("lru", 64), ("pinned", 64),
+                                         ("lru", 1), ("lru", 4096),
+                                         ("pinned", 2)])
+def test_gather_rows_bit_identity(small_graph, policy, rows):
+    """Whatever the capacity — below one batch's working set, capacity-1,
+    or larger than the whole table — the cache returns exactly the
+    backing table's float32 rows."""
+    g = small_graph
+    dc = DeviceFeatureCache(g, rows=rows, policy=policy)
+    rng = np.random.default_rng(rows)
+    for i in range(3):
+        ids = np.unique(rng.integers(0, g.num_nodes, 200))
+        out = np.asarray(dc.gather_rows(ids))
+        np.testing.assert_array_equal(out, g.features[ids])
+    c = dc.counters()
+    assert c["misses"] > 0
+    assert c["hits"] + c["misses"] > 0
+
+
+def test_full_residency_degenerates_to_no_evictions(small_graph):
+    """A cache larger than the table: after one sweep everything is
+    resident — the second sweep is all hits, zero misses/evictions."""
+    g = small_graph
+    dc = DeviceFeatureCache(g, rows=g.num_nodes + 10, policy="lru")
+    all_ids = np.arange(g.num_nodes)
+    dc.gather_rows(all_ids)
+    c1 = dc.counters()
+    assert c1["misses"] == g.num_nodes and c1["evictions"] == 0
+    np.testing.assert_array_equal(np.asarray(dc.gather_rows(all_ids)),
+                                  g.features)
+    c2 = dc.counters()
+    assert c2["misses"] == c1["misses"]          # no re-miss
+    assert c2["evictions"] == 0
+    assert c2["hits"] == c1["hits"] + g.num_nodes
+
+
+def test_capacity_one_thrashes_but_stays_correct(small_graph):
+    g = small_graph
+    dc = DeviceFeatureCache(g, rows=1, policy="lru")
+    ids = np.array([5, 9, 5, 9, 5])
+    out = np.asarray(dc.gather_rows(ids))
+    np.testing.assert_array_equal(out, g.features[ids])
+    c = dc.counters()
+    assert c["evictions"] >= c["misses"] - 1     # every admit displaces
+
+
+def test_pinned_preload_and_hot_hits(small_graph):
+    g = small_graph
+    dc = DeviceFeatureCache(g, rows=32, policy="pinned")
+    s = dc.stats()
+    assert s["pinned_rows"] == 16 and s["preload_rows"] == 16
+    hub = int(np.argmax(g.degrees()))
+    c0 = dc.counters()
+    np.testing.assert_array_equal(np.asarray(dc.gather_rows([hub]))[0],
+                                  g.features[hub])
+    c1 = dc.counters()
+    assert c1["hits"] == c0["hits"] + 1          # staged, never fetched
+    assert c1["misses"] == c0["misses"]
+
+
+def test_pinned_set_exceeding_capacity_raises(small_graph):
+    with pytest.raises(ValueError, match="pinned"):
+        DeviceFeatureCache(small_graph, rows=16, policy="pinned",
+                           pinned_fraction=2.0)
+    with pytest.raises(ValueError, match="pinned"):
+        PinnedCache(small_graph, 8, pinned_budget=9)
+
+
+def test_host_lru_capacity_one_and_eviction_reporting():
+    """Shared policy machinery edge case: a capacity-1 LRU thrashes
+    without corrupting payloads, and ``put`` reports its victim."""
+    c = LRUCache(1)
+    assert c.put(7, "a") is None
+    assert c.get(7) == "a"
+    assert c.put(8, "b") == (7, "a")             # victim + payload back
+    assert c.get(7) is None and c.get(8) == "b"
+    assert c.evictions == 1
+
+
+def test_disk_backed_misses_are_real_paged_reads(small_graph, disk_dir):
+    g = small_graph
+    st = DiskStore(disk_dir, cache_mb=0.25)
+    dc = DeviceFeatureCache(st, rows=16, policy="lru")
+    io0 = st.io_counters()
+    ids = np.unique(np.random.default_rng(3).integers(0, g.num_nodes, 64))
+    np.testing.assert_array_equal(np.asarray(dc.gather_rows(ids)),
+                                  g.features[ids])
+    io1 = st.io_counters()
+    assert io1["block_fetches"] > io0["block_fetches"]
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# pallas loader through the cache: the acceptance bar
+# ---------------------------------------------------------------------------
+
+def _loss_trajectory(loader, g, steps=3):
+    gnn = GraphSAGE(GNNConfig(feat_dim=g.feat_dim, hidden=16,
+                              n_classes=int(g.labels.max()) + 1,
+                              fanouts=FANOUTS))
+    opt = adamw(3e-3)
+    step = build_train_step(loader, gnn, opt)
+    p = gnn.init(jax.random.key(0))
+    state = {"params": p, "opt": opt.init(p),
+             "step": jnp.zeros((), jnp.int32)}
+    losses = []
+    state, _ = train_loop(loader, step, state, steps=steps,
+                          on_step=lambda i, s, m: losses.append(
+                              np.asarray(m["loss"])))
+    return losses
+
+
+@pytest.mark.parametrize("policy", ["lru", "pinned"])
+def test_pallas_cached_loader_bit_identity(small_graph, policy):
+    """pallas@cached == pallas@full-upload, bit for bit, with the device
+    cache far below the unique-rows-per-batch working set."""
+    g = small_graph
+    full = make_loader("pallas", g, batch_size=BATCH, fanouts=FANOUTS,
+                       seed=0)
+    cached = make_loader("pallas", g, batch_size=BATCH, fanouts=FANOUTS,
+                         seed=0,
+                         device_cache=DeviceCacheSpec(rows=24, policy=policy))
+    try:
+        for i in range(3):
+            a, b = full.get_batch(i), cached.get_batch(i)
+            np.testing.assert_array_equal(a.targets, b.targets)
+            for t, (x, y) in enumerate(zip(a.hop_ids, b.hop_ids)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                              err_msg=f"hop {t}")
+            for t, (x, y) in enumerate(zip(a.hop_feats, b.hop_feats)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                              err_msg=f"hop {t}")
+            np.testing.assert_array_equal(np.asarray(a.labels),
+                                          np.asarray(b.labels))
+            # counters ride in the trace, next to host-cache counters —
+            # and count each unique row exactly once (dispatch padding
+            # must not inflate hit rates)
+            dc = b.trace.io["devcache"]
+            assert dc["misses"] > 0
+            uniq = np.unique(np.concatenate(
+                [np.asarray(h).reshape(-1) for h in b.hop_ids]))
+            assert dc["hits"] + dc["misses"] == uniq.size
+        assert cached.stats()["devcache"]["evictions"] > 0
+    finally:
+        full.close()
+        cached.close()
+
+
+def test_pallas_cached_loss_trajectory_bit_identical(small_graph):
+    g = small_graph
+    full = make_loader("pallas", g, batch_size=BATCH, fanouts=FANOUTS,
+                       seed=0)
+    cached = make_loader("pallas", g, batch_size=BATCH, fanouts=FANOUTS,
+                         seed=0, device_cache=DeviceCacheSpec(rows=24,
+                                                              policy="lru"))
+    try:
+        la = _loss_trajectory(full, g)
+        lb = _loss_trajectory(cached, g)
+    finally:
+        full.close()
+        cached.close()
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_pallas_cached_through_diskstore(small_graph, disk_dir):
+    """The full device-side out-of-core path: HBM cache misses become
+    real paged disk reads, both counter families land in the trace."""
+    g = small_graph
+    st = DiskStore(disk_dir, cache_mb=0.25)
+    loader = make_loader("pallas", g, batch_size=BATCH, fanouts=FANOUTS,
+                         seed=0, store=st,
+                         device_cache=DeviceCacheSpec(rows=24, policy="lru"))
+    full = make_loader("pallas", g, batch_size=BATCH, fanouts=FANOUTS,
+                       seed=0)
+    try:
+        a, b = full.get_batch(0), loader.get_batch(0)
+        for x, y in zip(a.hop_feats, b.hop_feats):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        io = b.trace.io
+        assert io["devcache"]["misses"] > 0
+        assert io["block_fetches"] > 0           # host page-cache counters
+    finally:
+        full.close()
+        loader.close()
+        st.close()
+
+
+def test_pallas_cached_under_prefetch_bit_identical(small_graph):
+    """Cache admission in the prefetch worker must not change results."""
+    g = small_graph
+    sync = make_loader("pallas", g, batch_size=BATCH, fanouts=FANOUTS,
+                       seed=0, device_cache=DeviceCacheSpec(rows=24,
+                                                            policy="lru"))
+    pre = make_loader("pallas", g, batch_size=BATCH, fanouts=FANOUTS,
+                      seed=0, prefetch=2,
+                      device_cache=DeviceCacheSpec(rows=24, policy="lru"))
+    try:
+        for i in range(3):
+            a, b = sync.get_batch(i), pre.get_batch(i)
+            for x, y in zip(a.hop_feats, b.hop_feats):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    finally:
+        sync.close()
+        pre.close()
+
+
+def test_device_cache_rejected_off_pallas(small_graph):
+    with pytest.raises(ValueError, match="pallas"):
+        make_loader("host", small_graph, batch_size=4, fanouts=FANOUTS,
+                    device_cache=DeviceCacheSpec(rows=8))
+
+
+# ---------------------------------------------------------------------------
+# GraphSAINT sampler family
+# ---------------------------------------------------------------------------
+
+def test_saint_loader_shapes_and_training(small_graph):
+    g = small_graph
+    W = 3
+    loader = make_loader("host", g, batch_size=BATCH, sampler="saint",
+                         walk_length=W, seed=0)
+    try:
+        assert loader.fanouts == (W + 1,)
+        mb = loader.get_batch(0)
+        assert np.asarray(mb.hop_ids[0]).shape == (BATCH,)
+        assert np.asarray(mb.hop_ids[1]).shape == (BATCH, W + 1)
+        assert np.asarray(mb.hop_feats[1]).shape == (BATCH, W + 1, g.feat_dim)
+        np.testing.assert_array_equal(
+            np.asarray(mb.hop_feats[1]),
+            g.features[np.asarray(mb.hop_ids[1])])
+        # walks really follow edges: column 0 is the root itself
+        np.testing.assert_array_equal(np.asarray(mb.hop_ids[1])[:, 0],
+                                      np.asarray(mb.targets))
+        losses = _loss_trajectory_saint(loader, g, W)
+        assert np.isfinite(losses).all()
+    finally:
+        loader.close()
+
+
+def _loss_trajectory_saint(loader, g, W, steps=2):
+    gnn = GraphSAGE(GNNConfig(feat_dim=g.feat_dim, hidden=16,
+                              n_classes=int(g.labels.max()) + 1,
+                              fanouts=(W + 1,)))
+    opt = adamw(3e-3)
+    step = build_train_step(loader, gnn, opt)
+    p = gnn.init(jax.random.key(0))
+    state = {"params": p, "opt": opt.init(p),
+             "step": jnp.zeros((), jnp.int32)}
+    losses = []
+    train_loop(loader, step, state, steps=steps,
+               on_step=lambda i, s, m: losses.append(float(m["loss"])))
+    return np.asarray(losses)
+
+
+@pytest.mark.parametrize("backend", ["isp", "pallas"])
+def test_saint_rejected_on_device_backends(small_graph, host_mesh, backend):
+    with pytest.raises(ValueError, match="saint"):
+        make_loader(backend, small_graph, batch_size=4, sampler="saint",
+                    mesh=host_mesh)
+
+
+# ---------------------------------------------------------------------------
+# per-epoch cache counters
+# ---------------------------------------------------------------------------
+
+def test_epoch_counters_reset_per_epoch(small_graph, disk_dir):
+    st = DiskStore(disk_dir, cache_mb=0.25)
+    # single worker, depth-1 queue: production stays (nearly) in lockstep
+    # with consumption, so the epoch boundary is sharp enough to test
+    loader = make_loader("host", None, batch_size=BATCH, fanouts=FANOUTS,
+                         seed=0, store=st, n_workers=1, queue_depth=1)
+    try:
+        for i in range(2):
+            loader.get_batch(i)
+        assert "store_epoch" not in loader.stats()
+        loader.start_epoch()
+        for i in range(2, 8):
+            loader.get_batch(i)
+        s = loader.stats()
+        assert s["store_epoch"]["misses"] > 0
+        # the epoch view excludes (at least) the warmup batches' misses,
+        # which the cumulative view keeps (producers run ahead, so the
+        # boundary is fuzzy by the pipeline depth — but never the whole
+        # warmup)
+        assert s["store_epoch"]["misses"] < s["store"]["misses"]
+        # a new epoch mark restarts the window
+        loader.start_epoch()
+        s2 = loader.stats()
+        assert s2["store_epoch"]["misses"] <= s["store_epoch"]["misses"]
+    finally:
+        loader.close()
+        st.close()
+
+
+def test_epoch_counters_cover_devcache(small_graph):
+    loader = make_loader("pallas", small_graph, batch_size=BATCH,
+                         fanouts=FANOUTS, seed=0,
+                         device_cache=DeviceCacheSpec(rows=24, policy="lru"))
+    try:
+        loader.get_batch(0)
+        loader.start_epoch()
+        loader.get_batch(1)
+        s = loader.stats()
+        assert s["devcache_epoch"]["misses"] > 0
+        assert s["devcache_epoch"]["misses"] < s["devcache"]["misses"]
+    finally:
+        loader.close()
+
+
+# ---------------------------------------------------------------------------
+# sharded DiskStore page-cache lock
+# ---------------------------------------------------------------------------
+
+def test_sharded_lock_serves_identical_data(small_graph, disk_dir):
+    g = small_graph
+    for shards in (1, 4):
+        st = DiskStore(disk_dir, cache_mb=0.5, lock_shards=shards)
+        assert st.lock_shards == shards
+        for u in (0, 7, int(np.argmax(g.degrees()))):
+            np.testing.assert_array_equal(st.neighbors(u), g.neighbors(u))
+        np.testing.assert_array_equal(st.gather_features(np.arange(16)),
+                                      g.features[:16])
+        io = st.io_counters()
+        assert io["block_fetches"] == io["misses"]
+        st.close()
+
+
+def test_sharded_lock_concurrent_producers(small_graph, disk_dir):
+    """4 producer threads through one sharded store: every read is
+    correct and the counters stay consistent."""
+    g = small_graph
+    st = DiskStore(disk_dir, cache_mb=0.5, lock_shards=4)
+    errs = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(20):
+            ids = rng.integers(0, g.num_nodes, 16)
+            try:
+                np.testing.assert_array_equal(st.gather_features(ids),
+                                              g.features[ids])
+            except AssertionError as e:          # surfaced on the main thread
+                errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    io = st.io_counters()
+    assert io["block_fetches"] == io["misses"]
+    assert io["hits"] + io["misses"] >= io["requests"]
+    st.close()

@@ -153,6 +153,44 @@ def test_neighbor_sample_degree0_at_block_aligned_end():
     assert (np.asarray(out)[0] == 2).all()
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 130), st.sampled_from([1, 3, 8, 64]))
+def test_feature_gather_cached_tile_boundaries(R, tile_m):
+    """Cached gather (indirection + tiled row gather) == oracle for any
+    (rows, tile) combination, including R not a multiple of the tile."""
+    from repro.kernels.feature_gather import feature_gather_cached as cached_pl
+    rng = np.random.default_rng(R * 17 + tile_m)
+    N, C, F = 96, 40, 33
+    cache = jnp.asarray(rng.standard_normal((C, F)), jnp.float32)
+    # a partial residency map: nodes 0..C-1 occupy a random slot permutation
+    slot_of = np.full(N + 1, -1, np.int32)
+    slot_of[:C] = rng.permutation(C)
+    ids = jnp.asarray(rng.integers(0, C, R), jnp.int32)   # resident ids only
+    out = cached_pl(cache, jnp.asarray(slot_of), ids, tile_m=tile_m)
+    expect = np.asarray(cache)[slot_of[np.asarray(ids)]]
+    np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+def test_feature_gather_cached_ops_wrapper_nd():
+    """ops.feature_gather_cached handles n-d hop tensors and matches the
+    jnp oracle (which is also the REPRO_NO_KERNELS fallback)."""
+    rng = np.random.default_rng(6)
+    N, C, F = 64, 16, 17
+    cache = jnp.asarray(rng.standard_normal((C, F)), jnp.float32)
+    slot_of = np.full(N + 1, -1, np.int32)
+    resident = rng.choice(N, C, replace=False)
+    slot_of[resident] = np.arange(C)
+    ids = jnp.asarray(rng.choice(resident, (5, 3, 2)), jnp.int32)
+    out = ops.feature_gather_cached(cache, jnp.asarray(slot_of), ids)
+    assert out.shape == (5, 3, 2, F)
+    expect = ref.feature_gather_cached(cache, jnp.asarray(slot_of),
+                                       np.asarray(ids).reshape(-1))
+    np.testing.assert_array_equal(np.asarray(out).reshape(-1, F),
+                                  np.asarray(expect))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(cache)[slot_of[np.asarray(ids)]])
+
+
 def test_feature_gather_rows_single_call_nd():
     """ops.feature_gather_rows handles n-d hop tensors in one call."""
     rng = np.random.default_rng(3)
