@@ -18,9 +18,17 @@ epoch boundary is fuzzy by the producer queue depth (sharp for the
 synchronous device backends; use small queue depths when exact
 windows matter).
 
+Rows are configured through the declarative spec API: the shared
+spec-generated flags assemble one ``PipelineSpec`` per row (built by
+``build_pipeline``), or ``--spec a.json,b.json`` runs checked-in spec
+files verbatim (``benchmarks/specs/*.json`` — what CI drives).  Every
+result row embeds the exact spec JSON that produced it.
+
 ``--contention-workers N`` additionally runs the DiskStore contention
 micro-benchmark: N producer threads hammer the paged read path with the
 page-cache lock sharded vs. global, measuring multi-worker scaling.
+``--admission-bench`` adds devcache admission-overhead rows (batched
+numpy bookkeeping) at 10-100k unique rows/batch.
 
 Run:  PYTHONPATH=src python benchmarks/bench_backends.py
 Emits BENCH_backends.json (the perf-trajectory seed) and prints one line
@@ -122,7 +130,64 @@ def contention_bench(store_dir: str, *, n_workers: int, batches: int,
             / max(global_lock["batches_per_s"], 1e-9)}
 
 
+def admission_bench(sizes=(10_000, 30_000, 100_000), *, rows: int = 32_768,
+                    feat_dim: int = 8, repeats: int = 3) -> list[dict]:
+    """Devcache admission-overhead microbench: time ``gather_rows`` over
+    batches of 10-100k unique rows against a cache far below the working
+    set, per policy.  Feature width is kept small so the measurement is
+    the *bookkeeping* (batched numpy LRU/pinned admission + scatter
+    dispatch), not the row copy.  Solo timed runs after a warmup batch;
+    best-of-``repeats`` per size."""
+    import jax
+    import numpy as np
+
+    from repro.core.graph import attach_features, rmat_graph
+    from repro.storage import DeviceFeatureCache
+
+    n = 1 << 18
+    g = attach_features(rmat_graph(n, 1 << 19, seed=7, name="admission"),
+                        feat_dim)
+    out = []
+    for policy in ("lru", "pinned"):
+        dc = DeviceFeatureCache(g, rows=rows, policy=policy)
+        jax.block_until_ready(
+            dc.gather_rows(np.arange(rows // 2)))       # warm the jits
+        for size in sizes:
+            rng = np.random.default_rng(size)
+            best = float("inf")
+            for _ in range(repeats):
+                ids = np.unique(rng.integers(0, n, size * 2))[:size]
+                t0 = time.perf_counter()
+                jax.block_until_ready(dc.gather_rows(ids))
+                best = min(best, time.perf_counter() - t0)
+            row = {"policy": policy, "unique_rows": int(size),
+                   "seconds_per_batch": best,
+                   "rows_per_s": size / best}
+            out.append(row)
+            print(f"bench_backends,admission,{policy},{size},"
+                  f"rows_per_s,{row['rows_per_s']:.4g}")
+    return out
+
+
+def _row_name(spec) -> str:
+    """Result-row key encoding a spec's configuration, e.g.
+    ``pallas@disk+devcache+edgecache``."""
+    suffix = [spec.store.kind] if spec.store.kind != "mem" else []
+    dev = spec.device_cache_tier()
+    if dev is not None and "features" in dev.arrays:
+        suffix.append("devcache")
+    if dev is not None and "topology" in dev.arrays:
+        suffix.append("edgecache")
+    if spec.sampler.family != "khop":
+        suffix.append(spec.sampler.family)
+    return spec.backend.name + (f"@{'+'.join(suffix)}" if suffix else "")
+
+
 def main(argv=None):
+    from repro.core.config import (CacheTierSpec, PipelineSpec,
+                                   add_pipeline_args,
+                                   fill_pipeline_flag_defaults)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="reddit")
     ap.add_argument("--large-scale", action="store_true",
@@ -131,56 +196,110 @@ def main(argv=None):
     ap.add_argument("--graph-store", default="mem",
                     help="comma list of graph stores to bench: mem and/or "
                          "disk (disk rows run the host backend — and the "
-                         "pallas backend when --device-cache-rows is set — "
-                         "through real paged reads)")
-    ap.add_argument("--cache-mb", type=float, default=None,
-                    help="disk-store page-cache budget in MB")
-    ap.add_argument("--cache-policy", default="lru",
-                    choices=("lru", "pinned"))
-    ap.add_argument("--lock-shards", type=int, default=None,
-                    help="disk-store page-cache lock shards")
-    ap.add_argument("--device-cache-rows", type=int, default=0,
-                    help="pallas backend: HBM feature-cache rows (adds "
-                         "the pallas@devcache row; 0 = full upload)")
-    ap.add_argument("--device-cache-policy", default="pinned",
-                    choices=("lru", "pinned"))
-    ap.add_argument("--sampler", default="khop", choices=("khop", "saint"),
-                    help="sampler family (saint restricts to the host "
-                         "backend and overrides --fanouts)")
-    ap.add_argument("--walk-length", type=int, default=4)
+                         "pallas backend when --device-cache-rows or "
+                         "--edge-cache-blocks is set — through real paged "
+                         "reads)")
+    # the per-row data-plane flags are the shared spec-generated surface;
+    # --backends/--graph-store above replace the single-valued variants
+    add_pipeline_args(ap, exclude=("--backend", "--graph-store"),
+                      overrides={"batch": 32})
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--warmup", type=int, default=2)
-    ap.add_argument("--batch", type=int, default=32)
-    ap.add_argument("--fanouts", default="10,5")
     ap.add_argument("--hidden", type=int, default=64)
-    ap.add_argument("--prefetch", type=int, default=0,
-                    help="async prefetch queue depth (0 = synchronous)")
     ap.add_argument("--contention-workers", type=int, default=0,
                     help="run the DiskStore multi-producer contention "
                          "micro-benchmark with this many threads "
                          "(0 = skip; 4 matches the default producer pool)")
     ap.add_argument("--contention-batches", type=int, default=8,
                     help="batches per contention worker")
+    ap.add_argument("--admission-bench", action="store_true",
+                    help="add devcache admission-overhead rows at 10-100k "
+                         "unique rows/batch")
     ap.add_argument("--out", default="BENCH_backends.json")
     args = ap.parse_args(argv)
+    # the bench assembles per-row specs from flag values directly, so
+    # resolve the "not given" sentinels to the spec defaults up front
+    fill_pipeline_flag_defaults(args)
 
     import jax
     import jax.numpy as jnp
 
-    from repro.core import (GNNConfig, GraphSAGE, build_train_step,
-                            load_dataset, make_loader, train_loop)
+    from repro.core import (GNNConfig, GraphSAGE, build_pipeline,
+                            build_train_step, load_dataset, train_loop)
     from repro.distributed.sharding import ShardingRules
     from repro.launch.mesh import make_host_mesh
     from repro.optim import adamw
 
     if args.sampler == "saint":
-        fanouts = (args.walk_length + 1,)
         if args.backends != "host":
             print(f"bench_backends: --sampler saint is host-only; "
                   f"overriding --backends {args.backends!r} -> 'host'")
         args.backends = "host"
+
+    store_kinds = args.graph_store.split(",")
+    unknown = set(store_kinds) - {"mem", "disk"}
+    if unknown:
+        ap.error(f"--graph-store: unknown kind(s) {sorted(unknown)}; "
+                 "have mem, disk")
+
+    def make_spec(backend: str, kind: str, with_devcache: bool,
+                  store_dir=None) -> PipelineSpec:
+        from repro.core.config import (BackendSpec, PrefetchSpec,
+                                       SamplerSpec, StoreSpec)
+        tiers = []
+        if kind == "disk":
+            tiers.append(CacheTierSpec(
+                tier="host", policy=args.cache_policy,
+                capacity_mb=args.cache_mb, arrays=()))
+        if with_devcache:
+            tiers.append(CacheTierSpec.device(
+                rows=args.device_cache_rows,
+                edge_blocks=args.edge_cache_blocks,
+                policy=args.device_cache_policy,
+                pinned_fraction=args.device_cache_pinned_fraction))
+        return PipelineSpec(
+            backend=BackendSpec(name=backend),
+            sampler=SamplerSpec(family=args.sampler, fanouts=args.fanouts,
+                                walk_length=args.walk_length),
+            store=StoreSpec(kind=kind,
+                            path=store_dir if store_dir is not None
+                            else args.store_dir,
+                            lock_shards=args.lock_shards),
+            cache_tiers=tuple(tiers),
+            prefetch=PrefetchSpec(depth=args.prefetch),
+            batch_size=args.batch, seed=args.seed,
+            engine=args.storage_engine)
+
+    specs: list[PipelineSpec] = []
+    if args.spec:
+        # spec-driven rows: each file IS one benchmark row, verbatim.
+        # One GNN consumes every row, so the specs must agree on the
+        # hop-shape contract — fail before any row burns a run.
+        specs = [PipelineSpec.load(f) for f in args.spec.split(",")]
+        shapes = {s.effective_fanouts for s in specs}
+        if len(shapes) > 1:
+            ap.error(f"--spec files disagree on effective fanouts "
+                     f"{sorted(shapes)}; one GNN serves all rows, so "
+                     "bench them in separate runs")
     else:
-        fanouts = tuple(int(x) for x in args.fanouts.split(","))
+        has_device_cache = bool(args.device_cache_rows
+                                or args.edge_cache_blocks)
+        for kind in store_kinds:
+            for backend in args.backends.split(","):
+                dc = has_device_cache and backend == "pallas"
+                if kind == "disk" and backend != "host" and not dc:
+                    print(f"bench_backends: skipping {backend}@disk "
+                          "(device backends hold device-resident copies; "
+                          "pallas joins the disk rows via "
+                          "--device-cache-rows/--edge-cache-blocks)")
+                    continue
+                if dc and kind == "mem":
+                    # the full-upload baseline rides along, so one run
+                    # holds both sides of the cached-vs-uploaded comparison
+                    specs.append(make_spec(backend, kind, False))
+                specs.append(make_spec(backend, kind, dc))
+
+    fanouts = specs[0].effective_fanouts if specs else args.fanouts
     g = load_dataset(args.dataset, large_scale=args.large_scale)
     mesh = make_host_mesh()
     rules = ShardingRules.default()
@@ -189,19 +308,10 @@ def main(argv=None):
                               fanouts=fanouts))
     opt = adamw(1e-3)
 
-    device_cache = None
-    if args.device_cache_rows:
-        from repro.storage import DeviceCacheSpec
-        device_cache = DeviceCacheSpec(rows=args.device_cache_rows,
-                                       policy=args.device_cache_policy)
-
     store_dir = None
-    store_kinds = args.graph_store.split(",")
-    unknown = set(store_kinds) - {"mem", "disk"}
-    if unknown:
-        ap.error(f"--graph-store: unknown kind(s) {sorted(unknown)}; "
-                 "have mem, disk")
-    if "disk" in store_kinds or args.contention_workers:
+    needs_disk = (any(s.store.kind == "disk" and s.store.path is None
+                      for s in specs) or args.contention_workers)
+    if needs_disk:
         import atexit
         import shutil
         import tempfile
@@ -210,78 +320,57 @@ def main(argv=None):
         store_dir = tempfile.mkdtemp(prefix=f"graphstore-{args.dataset}-")
         atexit.register(shutil.rmtree, store_dir, ignore_errors=True)
         save_graph(g, store_dir)
+        import dataclasses
+        specs = [s.replace(store=dataclasses.replace(s.store,
+                                                     path=store_dir))
+                 if s.store.kind == "disk" and s.store.path is None else s
+                 for s in specs]
 
     results = {}
-    configs = []
-    for kind in store_kinds:
-        for backend in args.backends.split(","):
-            dc = device_cache if backend == "pallas" else None
-            if kind == "disk" and backend != "host" and dc is None:
-                print(f"bench_backends: skipping {backend}@disk (device "
-                      "backends hold device-resident copies; pallas joins "
-                      "the disk rows via --device-cache-rows)")
-                continue
-            if dc is not None and kind == "mem":
-                # the full-upload baseline rides along, so one run holds
-                # both sides of the cached-vs-uploaded comparison
-                configs.append((kind, backend, None))
-            configs.append((kind, backend, dc))
-    for kind, backend, dc in configs:
-        store = None
-        if kind == "disk":
-            from repro.storage import open_store
-            store = open_store("disk", g=g, path=store_dir,
-                               cache_mb=args.cache_mb,
-                               policy=args.cache_policy,
-                               lock_shards=args.lock_shards)
-        suffix = [kind] if kind != "mem" else []
-        if dc is not None:
-            suffix.append("devcache")
-        if args.sampler != "khop":
-            suffix.append(args.sampler)
-        row = backend + (f"@{'+'.join(suffix)}" if suffix else "")
-        loader = make_loader(backend, g, batch_size=args.batch,
-                             fanouts=fanouts, mesh=mesh,
-                             prefetch=args.prefetch, store=store,
-                             sampler=args.sampler,
-                             walk_length=args.walk_length,
-                             device_cache=dc)
+    for spec in specs:
+        row = _row_name(spec)
+        n = 2
+        while row in results:           # two specs sharing a shape (e.g.
+            row = f"{_row_name(spec)}#{n}"      # lru vs pinned) keep
+            n += 1                              # separate rows
+        pipe = build_pipeline(spec, g, mesh=mesh)
         try:
-            step = build_train_step(loader, gnn, opt, mesh, rules)
+            step = build_train_step(pipe, gnn, opt, mesh, rules)
             p = gnn.init(jax.random.key(0))
             state = {"params": p, "opt": opt.init(p),
                      "step": jnp.zeros((), jnp.int32)}
             with mesh:
                 # warmup covers jit compilation + pipeline fill
-                state, _ = train_loop(loader, step, state,
+                state, _ = train_loop(pipe, step, state,
                                       steps=args.warmup)
                 # cache counters from here on are the measured
                 # epoch's, not cumulative-including-warmup
-                loader.start_epoch()
-                state, stats = train_loop(loader, step, state,
+                pipe.start_epoch()
+                state, stats = train_loop(pipe, step, state,
                                           steps=args.warmup + args.steps,
                                           start=args.warmup)
-            loader_stats = loader.stats()
+            loader_stats = pipe.stats()
         finally:
-            loader.close()
-            if store is not None:
-                store.close()
+            pipe.close()
         results[row] = {
             "steps_per_s": stats.steps_per_s,
             "idle_fraction": stats.idle_fraction,
             "idle_s": stats.idle_s,
             "busy_s": stats.busy_s,
             "loader_stats": loader_stats,
+            # the exact configuration that produced this row, verbatim
+            "spec": spec.to_dict(),
         }
         print(f"bench_backends,{args.dataset},{row},"
               f"steps_per_s,{stats.steps_per_s:.4g}")
         print(f"bench_backends,{args.dataset},{row},"
               f"idle_fraction,{stats.idle_fraction:.4g}")
-        dcs = loader_stats.get("devcache")
-        if dcs:
-            print(f"bench_backends,{args.dataset},{row},devcache,"
-                  f"hits={dcs['hits']} misses={dcs['misses']} "
-                  f"evictions={dcs['evictions']}")
+        for kind in ("devcache", "edgecache"):
+            dcs = loader_stats.get(kind)
+            if dcs:
+                print(f"bench_backends,{args.dataset},{row},{kind},"
+                      f"hits={dcs['hits']} misses={dcs['misses']} "
+                      f"evictions={dcs['evictions']}")
 
     contention = None
     if args.contention_workers:
@@ -295,6 +384,10 @@ def main(argv=None):
               f"({contention['workers']} workers, "
               f"{contention['global']['batches_per_s']:.3g} -> "
               f"{contention['sharded']['batches_per_s']:.3g} batches/s)")
+
+    admission = None
+    if args.admission_bench:
+        admission = admission_bench()
 
     # sampler-family block-request locality (khop vs saint comparison);
     # loop-invariant, so computed once for the whole run
@@ -318,6 +411,7 @@ def main(argv=None):
         "graph_store": args.graph_store,
         "cache_mb": args.cache_mb,
         "device_cache_rows": args.device_cache_rows,
+        "edge_cache_blocks": args.edge_cache_blocks,
         "locality": locality,
         "backend_default": jax.default_backend(),
         "platform": platform.platform(),
@@ -325,6 +419,8 @@ def main(argv=None):
     }
     if contention is not None:
         payload["contention"] = contention
+    if admission is not None:
+        payload["devcache_admission"] = admission
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")

@@ -54,8 +54,14 @@ def _to_host(tree):
     return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
 
-def save(ckpt_dir: str, step: int, state) -> str:
-    """Synchronous atomic save.  Returns the checkpoint path."""
+def save(ckpt_dir: str, step: int, state, *,
+         manifest_extra: dict | None = None) -> str:
+    """Synchronous atomic save.  Returns the checkpoint path.
+
+    ``manifest_extra`` entries (JSON-serializable — e.g. the data-plane
+    ``PipelineSpec`` dict that produced the run) are merged into the
+    checkpoint manifest, so every checkpoint records the exact
+    configuration it was trained under."""
     os.makedirs(ckpt_dir, exist_ok=True)
     host = _to_host(state)
     flat = _flatten(host)
@@ -64,7 +70,7 @@ def save(ckpt_dir: str, step: int, state) -> str:
     with open(tmp, "wb") as f:
         np.savez(f, **flat)
     manifest = {"step": int(step), "keys": sorted(flat),
-                "time": time.time()}
+                "time": time.time(), **(manifest_extra or {})}
     mtmp = path + ".json" + f".tmp-{os.getpid()}"
     with open(mtmp, "w") as f:
         json.dump(manifest, f)
@@ -76,8 +82,9 @@ def save(ckpt_dir: str, step: int, state) -> str:
 class AsyncSaver:
     """Background-thread checkpoint writer with at-most-one in flight."""
 
-    def __init__(self, ckpt_dir: str):
+    def __init__(self, ckpt_dir: str, *, manifest_extra: dict | None = None):
         self.ckpt_dir = ckpt_dir
+        self.manifest_extra = manifest_extra
         self._thread: threading.Thread | None = None
         self.last_path: str | None = None
 
@@ -86,7 +93,8 @@ class AsyncSaver:
         host = _to_host(state)              # snapshot before returning
 
         def _run():
-            self.last_path = save(self.ckpt_dir, step, host)
+            self.last_path = save(self.ckpt_dir, step, host,
+                                  manifest_extra=self.manifest_extra)
 
         self._thread = threading.Thread(target=_run, daemon=True)
         self._thread.start()

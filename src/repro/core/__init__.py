@@ -13,6 +13,10 @@ loader     — the unified minibatch data plane: one SubgraphLoader
              interface over the host / isp / pallas backends
 """
 
+from repro.core.config import (BackendSpec, CacheTierSpec, Pipeline,
+                               PipelineSpec, PrefetchSpec, SamplerSpec,
+                               StoreSpec, add_pipeline_args, build_pipeline,
+                               spec_from_args)
 from repro.core.graph import (CSRGraph, DATASETS, attach_features,
                               edges_to_csr, kronecker_expand, load_dataset,
                               rmat_graph)

@@ -1,0 +1,707 @@
+"""Declarative data-plane configuration: the ``PipelineSpec`` tree.
+
+SmartSAGE's core argument is that large-scale GNN training is a
+*storage-hierarchy configuration problem* — which arrays live in which
+tier (HBM / host DRAM / SSD) and what caching sits between them.  This
+module makes that configuration a first-class, serializable object
+instead of a sprawl of keyword arguments and duplicated CLI flags:
+
+* ``PipelineSpec`` — a frozen dataclass tree composing ``BackendSpec``
+  (host / isp / pallas + backend knobs), ``SamplerSpec`` (khop fanouts or
+  GraphSAINT walks), ``StoreSpec`` (where the graph arrays live),
+  per-tier ``CacheTierSpec``s (the host page cache over the SSD layout
+  and the device HBM cache over the host, covering *features and
+  topology* uniformly), and ``PrefetchSpec``.  Validation runs at
+  construction — invalid tier/backend combinations fail before any
+  resource is opened — and ``to_dict``/``from_dict``/``to_json``/
+  ``from_json`` round-trip exactly, so every bench row and checkpoint
+  can record the precise configuration that produced it.
+
+* ``build_pipeline(spec, graph_or_store)`` — the one entry point the
+  launchers, benchmarks, and tests share.  It opens the store the spec
+  asks for (owning it, and any temp directory, for the lifetime of the
+  returned ``Pipeline``), attaches the simulated storage engine, and
+  builds the backend loader.  ``core.loader.make_loader`` survives as a
+  thin deprecation shim that builds a spec internally.
+
+* ``add_pipeline_args`` / ``spec_from_args`` — the CLI surface is
+  *generated from* a declarative flag table mapping each flag to a spec
+  field, so ``launch/train.py`` and ``benchmarks/bench_backends.py``
+  define their data-plane flags exactly once, and ``--spec file.json``
+  loads a whole configuration with individual flags as overrides.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Sequence
+
+from repro.storage.specs import DEFAULT
+
+BACKENDS = ("host", "isp", "pallas")
+SAMPLERS = ("khop", "saint")
+STORE_KINDS = ("mem", "disk")
+CACHE_POLICIES = ("lru", "pinned")
+CACHE_TIERS = ("host", "device")
+DEVICE_ARRAYS = ("features", "topology")
+ENGINES = ("none", "dram", "pmem", "mmap", "directio", "isp", "isp_oracle",
+           "fpga")
+
+
+def _check(value, name, choices):
+    if value not in choices:
+        raise ValueError(f"{name} must be one of {choices}, got {value!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Which data-preparation backend runs, plus its private knobs.
+
+    ``n_workers``/``queue_depth``/``straggler_factor`` configure the host
+    producer pipeline; ``axis`` is the isp mesh axis.  Knobs for other
+    backends are ignored (but preserved through serialization)."""
+
+    name: str = "host"
+    n_workers: int = 4
+    queue_depth: int = 8
+    straggler_factor: float = 4.0
+    axis: str = "data"
+
+    def __post_init__(self):
+        _check(self.name, "backend.name", BACKENDS)
+        if self.n_workers < 1 or self.queue_depth < 1:
+            raise ValueError("backend.n_workers and backend.queue_depth "
+                             "must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """Sampler family: GraphSAGE k-hop fanouts or GraphSAINT walks.
+
+    The default fanouts are the launchers' CPU-scale (10, 5), not the
+    paper's (25, 10) — ``make_loader``'s signature keeps the paper
+    default for library callers."""
+
+    family: str = "khop"
+    fanouts: tuple[int, ...] = (10, 5)
+    walk_length: int = 4
+
+    def __post_init__(self):
+        _check(self.family, "sampler.family", SAMPLERS)
+        object.__setattr__(self, "fanouts", tuple(int(f) for f in self.fanouts))
+        if not self.fanouts or any(f < 1 for f in self.fanouts):
+            raise ValueError(f"sampler.fanouts must be positive ints, got "
+                             f"{self.fanouts}")
+        if self.walk_length < 1:
+            raise ValueError("sampler.walk_length must be >= 1")
+
+    @property
+    def effective_fanouts(self) -> tuple[int, ...]:
+        """The per-hop shape contract the loader/GNN actually see: a SAINT
+        batch's one hop tensor is the whole (M, L+1) walk."""
+        if self.family == "saint":
+            return (self.walk_length + 1,)
+        return self.fanouts
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreSpec:
+    """Where the graph arrays live: DRAM (``mem``) or the block-aligned
+    on-disk DiskStore layout (``disk``).  ``path=None`` with ``disk``
+    means a pipeline-owned temp directory."""
+
+    kind: str = "mem"
+    path: str | None = None
+    block_bytes: int | None = None      # None = storage-spec default
+    lock_shards: int | None = None      # None = storage-spec default
+
+    def __post_init__(self):
+        _check(self.kind, "store.kind", STORE_KINDS)
+        if self.block_bytes is not None and self.block_bytes < 512:
+            raise ValueError("store.block_bytes must be >= 512")
+        if self.lock_shards is not None and self.lock_shards < 1:
+            raise ValueError("store.lock_shards must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheTierSpec:
+    """One cache tier of the storage hierarchy — the uniform abstraction
+    over both caches the system runs:
+
+    * ``tier='host'``: the DiskStore's DRAM page cache over the SSD
+      layout.  ``capacity_mb`` is the block-cache budget (None = storage
+      spec default); it always spans *all* on-disk arrays (one budget,
+      one namespaced block space).
+    * ``tier='device'``: the HBM cache over the host tier (pallas
+      backend).  ``arrays`` picks what reads through it — ``'features'``
+      (a ``rows`` x F hot-row cache fed to the ``feature_gather_cached``
+      kernel) and/or ``'topology'`` (an ``edge_blocks`` x BLOCK_E
+      edge-block cache fed to the ``neighbor_sample_cached`` kernel), so
+      sampling and gathering can both run beyond HBM capacity.
+
+    ``policy`` is shared machinery across tiers: ``'lru'`` recency or
+    ``'pinned'`` (hottest-by-degree set staged permanently,
+    ``pinned_fraction`` of the capacity, LRU for the rest)."""
+
+    tier: str = "device"
+    policy: str = "lru"
+    capacity_mb: float | None = None        # host tier budget
+    rows: int = 0                           # device tier: feature rows
+    edge_blocks: int = 0                    # device tier: topology blocks
+    pinned_fraction: float = 0.5
+    arrays: tuple[str, ...] = ("features",)
+
+    def __post_init__(self):
+        _check(self.tier, "cache tier", CACHE_TIERS)
+        _check(self.policy, "cache policy", CACHE_POLICIES)
+        object.__setattr__(self, "arrays", tuple(self.arrays))
+        if not 0.0 <= self.pinned_fraction <= 1.0:
+            raise ValueError("cache pinned_fraction must be in [0, 1]")
+        if self.tier == "device":
+            unknown = set(self.arrays) - set(DEVICE_ARRAYS)
+            if unknown or not self.arrays:
+                raise ValueError(
+                    f"device cache arrays must be a non-empty subset of "
+                    f"{DEVICE_ARRAYS}, got {self.arrays}")
+            if ("features" in self.arrays) != (self.rows > 0):
+                raise ValueError(
+                    "device cache: rows > 0 exactly when 'features' is in "
+                    f"arrays (got rows={self.rows}, arrays={self.arrays})")
+            if ("topology" in self.arrays) != (self.edge_blocks > 0):
+                raise ValueError(
+                    "device cache: edge_blocks > 0 exactly when 'topology' "
+                    f"is in arrays (got edge_blocks={self.edge_blocks}, "
+                    f"arrays={self.arrays})")
+        else:
+            if self.rows or self.edge_blocks:
+                raise ValueError("host tier capacity is capacity_mb; "
+                                 "rows/edge_blocks are device-tier fields")
+            if self.capacity_mb is not None and self.capacity_mb <= 0:
+                raise ValueError("host cache capacity_mb must be > 0")
+
+    @classmethod
+    def device(cls, *, rows: int = 0, edge_blocks: int = 0,
+               policy: str = "lru",
+               pinned_fraction: float = 0.5) -> "CacheTierSpec":
+        """Device tier with ``arrays`` derived from the capacities — the
+        one place the rows/edge_blocks <-> arrays rule lives."""
+        arrays = (("features",) if rows else ()) + \
+            (("topology",) if edge_blocks else ())
+        return cls(tier="device", policy=policy, rows=int(rows),
+                   edge_blocks=int(edge_blocks),
+                   pinned_fraction=pinned_fraction, arrays=arrays)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchSpec:
+    """Async prefetch queue depth (0 = synchronous; 2 = double buffer)."""
+
+    depth: int = 0
+
+    def __post_init__(self):
+        if self.depth < 0:
+            raise ValueError("prefetch.depth must be >= 0")
+
+
+_COMPONENTS = {
+    "backend": BackendSpec,
+    "sampler": SamplerSpec,
+    "store": StoreSpec,
+    "prefetch": PrefetchSpec,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    """The whole data-plane configuration, one serializable tree.
+
+    Construction validates cross-component compatibility (the checks
+    that used to live as if-soup inside ``make_loader`` and the
+    launchers), so an invalid combination fails loudly before any store
+    is opened or kernel compiled."""
+
+    backend: BackendSpec = BackendSpec()
+    sampler: SamplerSpec = SamplerSpec()
+    store: StoreSpec = StoreSpec()
+    cache_tiers: tuple[CacheTierSpec, ...] = ()
+    prefetch: PrefetchSpec = PrefetchSpec()
+    batch_size: int = 64
+    seed: int = 0
+    engine: str = "none"
+
+    def __post_init__(self):
+        object.__setattr__(self, "cache_tiers", tuple(self.cache_tiers))
+        if self.batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        _check(self.engine, "engine", ENGINES)
+        if self.sampler.family == "saint" and self.backend.name != "host":
+            raise ValueError(
+                "sampler family 'saint' runs on the host backend only "
+                f"(numpy random walks), not {self.backend.name!r}")
+        by_tier: dict[str, int] = {}
+        for t in self.cache_tiers:
+            by_tier[t.tier] = by_tier.get(t.tier, 0) + 1
+        if any(n > 1 for n in by_tier.values()):
+            raise ValueError("at most one cache tier per level "
+                             f"(got {by_tier})")
+        if "host" in by_tier and self.store.kind != "disk":
+            raise ValueError("a host cache tier fronts the on-disk layout; "
+                             "it needs store.kind='disk'")
+        dev = self.device_cache_tier()
+        if dev is not None and self.backend.name != "pallas":
+            raise ValueError(
+                "a device cache tier applies to the pallas backend only "
+                f"(got backend {self.backend.name!r}); features and "
+                "topology caches live in HBM in front of the device "
+                "kernels")
+
+    # -- tier lookups --------------------------------------------------------
+    def host_cache_tier(self) -> CacheTierSpec | None:
+        return next((t for t in self.cache_tiers if t.tier == "host"), None)
+
+    def device_cache_tier(self) -> CacheTierSpec | None:
+        return next((t for t in self.cache_tiers if t.tier == "device"), None)
+
+    def feature_cache(self) -> CacheTierSpec | None:
+        t = self.device_cache_tier()
+        return t if t is not None and "features" in t.arrays else None
+
+    def topology_cache(self) -> CacheTierSpec | None:
+        t = self.device_cache_tier()
+        return t if t is not None and "topology" in t.arrays else None
+
+    @property
+    def effective_fanouts(self) -> tuple[int, ...]:
+        return self.sampler.effective_fanouts
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PipelineSpec":
+        d = dict(d)
+        kw = {}
+        for key, comp in _COMPONENTS.items():
+            if key in d:
+                sub = d.pop(key)
+                if isinstance(sub, dict):
+                    _reject_unknown(comp, sub, key)
+                    sub = comp(**sub)
+                kw[key] = sub
+        if "cache_tiers" in d:
+            tiers = []
+            for t in d.pop("cache_tiers"):
+                if isinstance(t, dict):
+                    _reject_unknown(CacheTierSpec, t, "cache_tiers[]")
+                    t = CacheTierSpec(**t)
+                tiers.append(t)
+            kw["cache_tiers"] = tuple(tiers)
+        _reject_unknown(cls, d, "spec")
+        return cls(**kw, **d)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), indent=kw.pop("indent", 2), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PipelineSpec":
+        return cls.from_dict(json.loads(s))
+
+    @classmethod
+    def load(cls, path: str) -> "PipelineSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def replace(self, **kw) -> "PipelineSpec":
+        return dataclasses.replace(self, **kw)
+
+
+def _reject_unknown(cls, d: dict, where: str) -> None:
+    unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+    if unknown:
+        raise ValueError(f"unknown {where} field(s): {sorted(unknown)}")
+
+
+# ---------------------------------------------------------------------------
+# the assembled pipeline — the resources a spec materializes into
+# ---------------------------------------------------------------------------
+
+class Pipeline:
+    """A built data plane: the loader plus every resource the spec opened.
+
+    Implements the ``SubgraphLoader`` protocol by delegation, so it can
+    be handed straight to ``build_train_step``/``train_loop``.  ``close``
+    releases the loader and any store/temp directory the *pipeline*
+    created (caller-provided stores are left open)."""
+
+    def __init__(self, spec: PipelineSpec, loader, *, graph=None, store=None,
+                 engine=None, owns_store: bool = False,
+                 tmpdir: str | None = None):
+        self.spec = spec
+        self.loader = loader
+        self.graph = graph
+        self.store = store
+        self.engine = engine
+        self.notes: list[str] = []
+        self._owns_store = owns_store
+        self._tmpdir = tmpdir
+
+    @property
+    def backend(self) -> str:
+        return self.loader.backend
+
+    @property
+    def fanouts(self) -> tuple[int, ...]:
+        return tuple(self.loader.fanouts)
+
+    def get_batch(self, idx: int):
+        return self.loader.get_batch(idx)
+
+    def stats(self) -> dict:
+        return self.loader.stats()
+
+    def start_epoch(self) -> None:
+        mark = getattr(self.loader, "start_epoch", None)
+        if mark is not None:
+            mark()
+
+    def describe(self) -> str:
+        s = self.spec
+        bits = [f"backend={s.backend.name}", f"sampler={s.sampler.family}",
+                f"store={s.store.kind}"]
+        if s.engine != "none":
+            bits.append(f"engine={s.engine}")
+        if s.prefetch.depth:
+            bits.append(f"prefetch={s.prefetch.depth}")
+        host = s.host_cache_tier()
+        if host is not None:
+            bits.append(f"host-cache={host.capacity_mb or 'default'}MB"
+                        f"({host.policy})")
+        dev = s.device_cache_tier()
+        if dev is not None:
+            parts = []
+            if "features" in dev.arrays:
+                parts.append(f"{dev.rows} rows")
+            if "topology" in dev.arrays:
+                parts.append(f"{dev.edge_blocks} edge blocks")
+            bits.append(f"device-cache={'+'.join(parts)}({dev.policy})")
+        return ", ".join(bits)
+
+    def close(self) -> None:
+        try:
+            self.loader.close()
+        finally:
+            if self._owns_store and self.store is not None:
+                self.store.close()
+            if self._tmpdir is not None:
+                import shutil
+                shutil.rmtree(self._tmpdir, ignore_errors=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def build_pipeline(spec: PipelineSpec, graph_or_store=None, *, g=None,
+                   store=None, mesh=None) -> Pipeline:
+    """Materialize ``spec`` into a running data plane — THE entry point.
+
+    ``graph_or_store`` (or the explicit ``g``/``store`` keywords) supply
+    the data: a ``CSRGraph``, a ``GraphStore``, or both.  When the spec
+    asks for a disk store and none was passed, the pipeline serializes
+    the graph into ``spec.store.path`` (or a temp directory it owns) and
+    opens a ``DiskStore`` with the host cache tier's budget/policy.
+
+    Returns a ``Pipeline`` (a ``SubgraphLoader`` by delegation) that
+    owns exactly the resources it created.
+    """
+    from repro.core.graph import CSRGraph
+
+    if graph_or_store is not None:
+        if isinstance(graph_or_store, CSRGraph):
+            if g is not None:
+                raise ValueError("pass the graph positionally or as g=, "
+                                 "not both")
+            g = graph_or_store
+        else:
+            if store is not None:
+                raise ValueError("pass the store positionally or as store=, "
+                                 "not both")
+            store = graph_or_store
+    if g is None and store is None:
+        raise ValueError("build_pipeline needs a graph and/or a GraphStore")
+
+    owns_store = False
+    tmpdir = None
+    notes = []
+    if store is None and spec.store.kind == "disk":
+        device_only = spec.backend.name == "pallas" and \
+            spec.device_cache_tier() is None
+        if spec.backend.name == "isp" and g is not None:
+            # mesh shards are device-resident; a disk store would be
+            # serialized and never read
+            notes.append("store.kind='disk' does not apply to the isp "
+                         "backend (mesh shards are device-resident); "
+                         "proceeding in-memory")
+        elif device_only and g is not None:
+            notes.append("pallas without a device cache tier never reads "
+                         "through the store; proceeding in-memory "
+                         "(full-table upload)")
+        else:
+            from repro.storage.store import open_store
+            path = spec.store.path
+            if path is None:
+                import tempfile
+                name = g.name if g is not None else "graph"
+                path = tempfile.mkdtemp(prefix=f"graphstore-{name}-")
+                tmpdir = path
+            host = spec.host_cache_tier()
+            store_kw = {}
+            if spec.store.lock_shards is not None:
+                store_kw["lock_shards"] = spec.store.lock_shards
+            store = open_store("disk", g=g, path=path,
+                               block_bytes=spec.store.block_bytes,
+                               cache_mb=None if host is None
+                               else host.capacity_mb,
+                               policy=None if host is None else host.policy,
+                               **store_kw)
+            owns_store = True
+
+    engine = None
+    if spec.engine != "none":
+        from repro.storage.engines import make_engine
+        if g is None:
+            # one materialization, reused by the loader below (engines
+            # model the whole graph, so features stay included)
+            g = store.to_csr()
+        engine = make_engine(spec.engine, g,
+                             measured=store is not None, store=store)
+
+    from repro.core.loader import _build_loader
+    loader = _build_loader(spec, g=g, store=store, mesh=mesh,
+                           storage_engine=engine)
+    pipe = Pipeline(spec, loader, graph=g, store=store, engine=engine,
+                    owns_store=owns_store, tmpdir=tmpdir)
+    pipe.notes = notes
+    return pipe
+
+
+# ---------------------------------------------------------------------------
+# CLI surface — flags generated from the spec field table
+# ---------------------------------------------------------------------------
+
+def _parse_fanouts(s) -> tuple[int, ...]:
+    if isinstance(s, (tuple, list)):
+        return tuple(int(x) for x in s)
+    return tuple(int(x) for x in str(s).split(","))
+
+
+#: flag -> (spec path, argparse kwargs).  Paths address the spec tree;
+#: the three pseudo-paths ``cache.*`` / ``devcache.*`` configure the two
+#: cache tiers (a host tier exists iff the store is on disk; a device
+#: tier exists iff rows or edge_blocks is set).
+FLAG_TABLE = {
+    "--backend": ("backend.name", dict(
+        choices=BACKENDS,
+        help="GNN data-preparation backend (SubgraphLoader)")),
+    "--sampler": ("sampler.family", dict(
+        choices=SAMPLERS,
+        help="sampler family: GraphSAGE k-hop fanouts or GraphSAINT "
+             "random walks (host backend only)")),
+    "--fanouts": ("sampler.fanouts", dict(
+        type=_parse_fanouts, metavar="F1,F2,...",
+        help="per-hop fanouts for the khop sampler")),
+    "--walk-length": ("sampler.walk_length", dict(
+        type=int, help="GraphSAINT walk length (--sampler saint)")),
+    "--batch": ("batch_size", dict(type=int, help="minibatch size")),
+    "--seed": ("seed", dict(
+        type=int, help="per-batch target/sampling seed")),
+    "--prefetch": ("prefetch.depth", dict(
+        type=int,
+        help="async prefetch queue depth (0 = synchronous; 2 = double "
+             "buffering): overlap data preparation with training")),
+    "--storage-engine": ("engine", dict(
+        choices=ENGINES,
+        help="simulated storage tier attached to the loader")),
+    "--graph-store": ("store.kind", dict(
+        choices=STORE_KINDS,
+        help="where the graph data lives: 'mem' = DRAM arrays, 'disk' = "
+             "out-of-core DiskStore (block-aligned on-disk layout + live "
+             "page cache)")),
+    "--store-dir": ("store.path", dict(
+        help="directory for the on-disk graph layout (default: a fresh "
+             "temp dir; reused if it already holds a manifest)")),
+    "--lock-shards": ("store.lock_shards", dict(
+        type=int,
+        help="disk-store page-cache lock shards (default: storage spec; "
+             "1 = single global lock)")),
+    "--cache-mb": ("cache.capacity_mb", dict(
+        type=float,
+        help="host tier: disk-store page-cache budget in MB (default: "
+             "storage spec; set below the on-disk footprint to exercise "
+             "the beyond-DRAM working set)")),
+    "--cache-policy": ("cache.policy", dict(
+        choices=CACHE_POLICIES,
+        help="host tier placement: OS-page-cache-style LRU or hot-block "
+             "pinning + LRU spill")),
+    "--device-cache-rows": ("devcache.rows", dict(
+        type=int,
+        help="device tier (pallas): HBM feature-cache capacity in rows "
+             "(0 = full-table upload)")),
+    "--edge-cache-blocks": ("devcache.edge_blocks", dict(
+        type=int,
+        help="device tier (pallas): HBM edge-block cache capacity in "
+             "BLOCK_E-wide topology blocks (0 = full edge-array upload); "
+             "with it the sampling kernel too runs beyond HBM")),
+    "--device-cache-policy": ("devcache.policy", dict(
+        choices=CACHE_POLICIES,
+        help="device tier placement: LRU recency or degree-pinned hot "
+             "set + LRU spill")),
+    "--device-cache-pinned-fraction": ("devcache.pinned_fraction", dict(
+        type=float,
+        help="device tier: fraction of the capacity staged permanently "
+             "under the pinned policy")),
+}
+
+_DEFAULT_SPEC = None
+
+#: argparse default marking "flag not given" — distinguishable from an
+#: explicitly passed value that happens to equal the spec default, so
+#: ``--spec file.json --prefetch 0`` really turns prefetch off
+_UNSET = object()
+
+
+def _spec_defaults() -> dict:
+    global _DEFAULT_SPEC
+    if _DEFAULT_SPEC is None:
+        d = PipelineSpec().to_dict()
+        # plain dicts, not CacheTierSpec instances: rows=0 just means "no
+        # tier yet", which the real constructor (rightly) rejects
+        d["cache"] = dict(tier="host", policy=DEFAULT.diskstore.policy,
+                          capacity_mb=None, rows=0, edge_blocks=0,
+                          pinned_fraction=0.5, arrays=())
+        d["devcache"] = dict(
+            tier="device", policy=DEFAULT.devcache.policy, capacity_mb=None,
+            rows=0, edge_blocks=0,
+            pinned_fraction=DEFAULT.devcache.pinned_fraction,
+            arrays=("features",))
+        _DEFAULT_SPEC = d
+    return _DEFAULT_SPEC
+
+
+def _tree_get(tree: dict, path: str):
+    node = tree
+    for part in path.split("."):
+        node = node[part]
+    return node
+
+
+def _tree_set(tree: dict, path: str, value) -> None:
+    parts = path.split(".")
+    node = tree
+    for part in parts[:-1]:
+        node = node[part]
+    node[parts[-1]] = value
+
+
+def add_pipeline_args(parser, exclude: Sequence[str] = (),
+                      overrides: dict | None = None) -> None:
+    """Attach the generated data-plane flags (plus ``--spec``) to an
+    ``argparse`` parser.  ``exclude`` drops flags a launcher replaces
+    with its own (e.g. the benchmark's multi-valued ``--backends``);
+    ``overrides`` changes a flag's *default* (by dest name, e.g.
+    ``{"backend": "isp"}``).
+
+    Non-overridden flags default to the ``_UNSET`` sentinel so
+    ``spec_from_args`` can tell "not given" (keep the spec/base value)
+    from "explicitly set to the default value" (a real override) —
+    launchers that read flag attributes directly should call
+    ``fill_pipeline_flag_defaults(args)`` first."""
+    parser.add_argument("--spec", default=None, metavar="FILE",
+                        help="load the data-plane PipelineSpec from a JSON "
+                             "file; individual flags override its fields")
+    flag_defaults = {}
+    for flag, (path, kw) in FLAG_TABLE.items():
+        if flag in exclude:
+            continue
+        dest = flag.lstrip("-").replace("-", "_")
+        default = _UNSET
+        if overrides and dest in overrides:
+            default = overrides[dest]
+            flag_defaults[dest] = default
+        parser.add_argument(flag, dest=dest, default=default, **kw)
+    parser.set_defaults(_pipeline_flag_defaults=flag_defaults)
+
+
+def fill_pipeline_flag_defaults(args) -> None:
+    """Replace ``_UNSET`` flag values with the spec defaults, in place —
+    for launchers that read flag attributes directly instead of (only)
+    through ``spec_from_args``."""
+    defaults = _spec_defaults()
+    for flag, (path, _) in FLAG_TABLE.items():
+        dest = flag.lstrip("-").replace("-", "_")
+        if getattr(args, dest, None) is _UNSET:
+            setattr(args, dest, _tree_get(defaults, path))
+
+
+def spec_from_args(args) -> PipelineSpec:
+    """Build a ``PipelineSpec`` from parsed CLI args.
+
+    With ``--spec FILE`` the file is the base configuration and every
+    flag the user actually passed overrides its field (even when the
+    value equals the flag's default); without, the flags fully define
+    the spec.  Cache tiers are derived: a host tier exists iff the
+    store is on disk, a device tier iff feature rows or topology edge
+    blocks were requested.
+    """
+    defaults = _spec_defaults()
+    flag_defaults = getattr(args, "_pipeline_flag_defaults", {})
+    base = None
+    spec_path = getattr(args, "spec", None)
+    if spec_path:
+        base = PipelineSpec.load(spec_path)
+
+    tree = base.to_dict() if base is not None else PipelineSpec().to_dict()
+    # scratch dicts for the two tiers, seeded from the base spec's tiers
+    cache = dict(defaults["cache"])
+    devcache = dict(defaults["devcache"])
+    for t in tree.pop("cache_tiers", ()):
+        if t["tier"] == "host":
+            cache = dict(t)
+        else:
+            devcache = dict(t)
+    tree["cache"], tree["devcache"] = cache, devcache
+
+    for flag, (path, _) in FLAG_TABLE.items():
+        dest = flag.lstrip("-").replace("-", "_")
+        if not hasattr(args, dest):
+            continue
+        value = getattr(args, dest)
+        if value is _UNSET:
+            continue                    # flag not given: keep the base
+        if base is not None and dest in flag_defaults \
+                and value == flag_defaults[dest]:
+            # a launcher-overridden default (e.g. train.py's --backend
+            # isp) is indistinguishable from "not given" — keep the spec
+            continue
+        _tree_set(tree, path, value)
+
+    cache = tree.pop("cache")
+    devcache = tree.pop("devcache")
+    tiers = []
+    if tree["store"]["kind"] == "disk":
+        cache["arrays"] = []            # host tier spans the whole store
+        cache["rows"] = cache["edge_blocks"] = 0
+        tiers.append(cache)
+    rows = int(devcache.get("rows") or 0)
+    edge_blocks = int(devcache.get("edge_blocks") or 0)
+    if rows or edge_blocks:
+        tiers.append(CacheTierSpec.device(
+            rows=rows, edge_blocks=edge_blocks, policy=devcache["policy"],
+            pinned_fraction=devcache["pinned_fraction"]))
+    tree["cache_tiers"] = tiers
+    return PipelineSpec.from_dict(tree)

@@ -88,6 +88,15 @@ class CSRGraph:
     def gather_features(self, ids: np.ndarray) -> np.ndarray:
         return self.features[np.asarray(ids)]
 
+    def gather_edge_blocks(self, blocks: np.ndarray,
+                           block_e: int) -> np.ndarray:
+        """``block_e``-wide int32 chunks of the edge-list array, zero-padded
+        past its end — the unit the device edge-block cache admits and the
+        cached sampling kernel stages.  blocks: (B,) block ids -> (B,
+        block_e)."""
+        return read_edge_blocks(lambda lo, hi: self.indices[lo:hi],
+                                blocks, block_e, self.num_edges)
+
     def gather_labels(self, ids: np.ndarray) -> np.ndarray:
         return self.labels[np.asarray(ids)]
 
@@ -111,6 +120,23 @@ class CSRGraph:
             assert self.features.shape[0] == self.num_nodes
         if self.labels is not None:
             assert self.labels.shape[0] == self.num_nodes
+
+
+def read_edge_blocks(read, blocks: np.ndarray, block_e: int,
+                     num_edges: int) -> np.ndarray:
+    """Shared edge-block slicing: ``block_e``-wide int32 chunks of an edge
+    array served by ``read(lo_entry, hi_entry)``, zero-padded past
+    ``num_edges``.  One definition of the pad rule — the cached sampling
+    kernel's bit-identity depends on every backing producing identical
+    padding, so CSRGraph and DiskStore both delegate here."""
+    blocks = np.asarray(blocks, np.int64).reshape(-1)
+    out = np.zeros((blocks.size, block_e), np.int32)
+    for j, b in enumerate(blocks):
+        lo = int(b) * block_e
+        hi = min(lo + block_e, num_edges)
+        if hi > lo:
+            out[j, :hi - lo] = read(lo, hi)
+    return out
 
 
 def _edge_keys(src: np.ndarray, dst: np.ndarray, n: int) -> np.ndarray:

@@ -54,10 +54,13 @@ import dataclasses
 import functools
 import threading
 import time
+import warnings
 from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+from repro.core.config import (BackendSpec, CacheTierSpec, PipelineSpec,
+                               PrefetchSpec, SamplerSpec, StoreSpec)
 from repro.core.graph import CSRGraph
 from repro.core.sampler import (DEFAULT_FANOUTS, SampleTrace, _io_delta,
                                 _io_snapshot, sample_khop, saint_random_walk)
@@ -120,52 +123,100 @@ def make_loader(name: str, g: CSRGraph | None, *, batch_size: int = 64,
                 seed: int = 0, storage_engine=None, prefetch: int = 0,
                 store=None, sampler: str = "khop", walk_length: int = 4,
                 device_cache=None, **kw) -> "SubgraphLoader":
-    """Build a registered backend loader over ``g`` and/or a GraphStore.
+    """DEPRECATED keyword-soup shim over the declarative spec API.
 
-    ``store`` selects where the graph data is *read from*: None (default)
-    uses ``g``'s in-memory arrays; a ``storage.store.DiskStore`` makes the
-    host backend's sampling and feature gathers real paged disk reads
-    through its page cache (the out-of-core data plane).  The device
-    backends (isp/pallas) hold device-resident copies, so they
-    materialize from the store only when ``g`` is not given — except
-    feature rows on the pallas backend when ``device_cache`` is set (see
-    below).
-
-    ``sampler`` picks the sampler family: ``'khop'`` (GraphSAGE
-    Algorithm 1, the default, every backend) or ``'saint'`` (GraphSAINT
-    random walks of ``walk_length`` steps, host backend only; the loader's
-    ``fanouts`` become ``(walk_length + 1,)`` — one hop tensor holding the
-    whole walk — so a 1-layer GraphSAGE consumes the batches unchanged).
+    New call sites should build a ``core.config.PipelineSpec`` and call
+    ``core.config.build_pipeline(spec, graph_or_store)``; this shim
+    assembles exactly that spec from its keyword arguments (so the two
+    paths share one construction and one validation layer — training is
+    bit-identical between them, asserted in tests/test_config.py) and
+    returns the bare loader.
 
     ``device_cache`` (a ``storage.specs.DeviceCacheSpec``, pallas backend
-    only) replaces the full feature-table upload with an HBM-resident
-    ``DeviceFeatureCache``: hits are gathered on-device through the
-    ``feature_gather_cached`` kernel, misses fetched through the
-    GraphStore — the device-side out-of-core path, bit-identical to the
-    full upload at equal seeds.
-
-    ``prefetch > 0`` wraps the loader in a ``PrefetchingLoader`` of that
-    queue depth: a background worker produces batch ``i+1`` (device
-    dispatch, cache admission + simulated-storage trace included) while
-    the consumer runs step ``i``.  Per-batch-seed determinism makes the
-    prefetched batches bit-identical to synchronous ones.
+    only) becomes a device ``CacheTierSpec`` over the feature rows;
+    ``store`` stays a live object — the spec records only its kind.
+    Host-pipeline knobs (``n_workers``/``queue_depth``/
+    ``straggler_factor``) and the isp ``axis`` ride in ``**kw``.
     """
     if name not in LOADERS:
         raise KeyError(f"unknown backend {name!r}; have {sorted(LOADERS)}")
-    if device_cache is not None and name != "pallas":
-        raise ValueError("device_cache applies to the pallas backend only; "
-                         f"got backend {name!r}")
+    backend_kw = {k: kw.pop(k) for k in ("n_workers", "queue_depth",
+                                         "straggler_factor", "axis")
+                  if k in kw}
+    if kw:
+        raise TypeError(f"make_loader got unknown kwargs {sorted(kw)}")
+    tiers = []
+    if device_cache is not None and (
+            getattr(device_cache, "rows", 0)
+            or getattr(device_cache, "edge_blocks", 0)):
+        tiers.append(CacheTierSpec.device(
+            rows=getattr(device_cache, "rows", 0),
+            edge_blocks=getattr(device_cache, "edge_blocks", 0),
+            policy=device_cache.policy,
+            pinned_fraction=device_cache.pinned_fraction))
+    spec = PipelineSpec(
+        backend=BackendSpec(name=name, **backend_kw),
+        sampler=SamplerSpec(family=sampler, fanouts=tuple(fanouts),
+                            walk_length=walk_length),
+        store=StoreSpec(kind=getattr(store, "kind", "mem")),
+        cache_tiers=tuple(tiers),
+        prefetch=PrefetchSpec(depth=prefetch),
+        batch_size=batch_size, seed=seed)
+    return _build_loader(spec, g=g, store=store, mesh=mesh,
+                         storage_engine=storage_engine)
+
+
+def _build_loader(spec: PipelineSpec, *, g: CSRGraph | None, store=None,
+                  mesh=None, storage_engine=None) -> "SubgraphLoader":
+    """Construct the backend loader a validated spec describes.
+
+    Shared by ``config.build_pipeline`` (which also materializes the
+    store/engine the spec asks for) and the ``make_loader`` shim (whose
+    callers pass live objects).  ``store`` selects where graph data is
+    *read from*; the device backends materialize a ``CSRGraph`` from it
+    only when ``g`` is not given — with a loud warning, since that loads
+    the whole store into DRAM, and skipping the feature table when a
+    device feature-cache tier will fetch rows on demand anyway.
+    """
+    name = spec.backend.name
+    if name not in LOADERS:
+        raise KeyError(f"unknown backend {name!r}; have {sorted(LOADERS)}")
+    feature_cache = spec.feature_cache()
+    edge_cache = spec.topology_cache()
     if g is None and store is not None and name != "host":
-        g = store.to_csr()
-    if name == "pallas":
-        kw["device_cache"] = device_cache
-    loader = LOADERS[name](g, batch_size=batch_size, fanouts=tuple(fanouts),
-                           mesh=mesh, seed=seed, sampler=sampler,
-                           walk_length=walk_length,
+        skip_features = feature_cache is not None
+        nbytes = getattr(store, "nbytes_on_disk", lambda: 0)()
+        warnings.warn(
+            f"materializing the full graph from the {store.kind!r} store "
+            f"into DRAM for the {name!r} backend"
+            + (f" (~{nbytes / 2**20:.0f} MB on disk"
+               + (", feature table left on disk for the device cache)"
+                  if skip_features else ")") if nbytes else "")
+            + "; pass the CSRGraph directly, or use the host backend, to "
+              "avoid the copy", stacklevel=3)
+        import inspect
+        params = inspect.signature(store.to_csr).parameters
+        if "include_features" in params:
+            g = store.to_csr(include_features=not skip_features)
+        else:                           # stores predating the parameter
+            g = store.to_csr()
+    kw = {}
+    if name == "host":
+        kw.update(n_workers=spec.backend.n_workers,
+                  queue_depth=spec.backend.queue_depth,
+                  straggler_factor=spec.backend.straggler_factor)
+    elif name == "isp":
+        kw.update(axis=spec.backend.axis)
+    elif name == "pallas":
+        kw.update(device_cache=feature_cache, edge_cache=edge_cache)
+    loader = LOADERS[name](g, batch_size=spec.batch_size,
+                           fanouts=spec.sampler.fanouts, mesh=mesh,
+                           seed=spec.seed, sampler=spec.sampler.family,
+                           walk_length=spec.sampler.walk_length,
                            storage_engine=storage_engine, store=store, **kw)
-    if prefetch:
+    if spec.prefetch.depth:
         from repro.core.pipeline import PrefetchingLoader
-        loader = PrefetchingLoader(loader, depth=prefetch)
+        loader = PrefetchingLoader(loader, depth=spec.prefetch.depth)
     return loader
 
 
@@ -208,6 +259,7 @@ class _LoaderBase:
         self.simulated_storage_s = 0.0
         self._storage_lock = threading.Lock()
         self.devcache = None
+        self.edgecache = None
         self._epoch0 = None
 
     def targets(self, idx: int) -> np.ndarray:
@@ -259,6 +311,8 @@ class _LoaderBase:
             src["store"] = io
         if self.devcache is not None:
             src["devcache"] = self.devcache.counters
+        if self.edgecache is not None:
+            src["edgecache"] = self.edgecache.counters
         return src
 
     def start_epoch(self) -> None:
@@ -277,6 +331,8 @@ class _LoaderBase:
             s["store"] = store_stats()
         if self.devcache is not None:
             s["devcache"] = self.devcache.stats()
+        if self.edgecache is not None:
+            s["edgecache"] = self.edgecache.stats()
         if self._epoch0 is not None:
             for name, fn in self._counter_sources().items():
                 base = self._epoch0.get(name, {})
@@ -401,21 +457,33 @@ class PallasSubgraphLoader(_LoaderBase):
     ``feature_gather`` row-gather kernel — the paper's ISP firmware loop on
     the TPU memory hierarchy, feeding real training.
 
-    With ``device_cache`` (a ``DeviceCacheSpec``) the full feature-table
-    upload is replaced by an HBM-resident ``DeviceFeatureCache``: the
-    batch's unique node ids are resolved against the cache, misses are
-    fetched through the GraphStore (in-memory or real paged DiskStore
-    reads) and admitted by the host-managed policy, and the rows are
-    gathered on-device by the ``feature_gather_cached`` kernel.  Under a
-    ``PrefetchingLoader`` the admission uploads run in the prefetch
-    worker, overlapping the consumer's train step.  Training is
-    bit-identical to the full upload at equal seeds; per-batch
-    hit/miss/eviction counters land in ``Minibatch.trace.io`` next to the
-    host page-cache counters."""
+    Either array family can read through an HBM cache tier instead of a
+    full upload (``core.config.CacheTierSpec``, tier='device'):
+
+    * ``device_cache`` (arrays containing 'features'): an HBM-resident
+      ``DeviceFeatureCache`` — the batch's unique node ids are resolved
+      against the cache, misses are fetched through the GraphStore
+      (in-memory or real paged DiskStore reads) and admitted by the
+      host-managed policy, and rows are gathered on-device by the
+      ``feature_gather_cached`` kernel.
+    * ``edge_cache`` (arrays containing 'topology'): a
+      ``DeviceEdgeBlockCache`` in front of the CSR ``indices`` array —
+      sampling dispatches the ``neighbor_sample_cached`` kernel, which
+      reads each target's two edge blocks through the cache's slot
+      indirection, so the edge array too stays off-device (the ROADMAP's
+      out-of-core-topology path).  Frontiers whose block working set
+      exceeds the cache are sampled in planned chunks.
+
+    Under a ``PrefetchingLoader`` the admission uploads run in the
+    prefetch worker, overlapping the consumer's train step.  Training is
+    bit-identical to the full uploads at equal seeds; per-batch
+    hit/miss/eviction counters land in ``Minibatch.trace.io`` —
+    ``'devcache'`` and ``'edgecache'`` blocks next to the host
+    page-cache counters."""
 
     def __init__(self, g, *, batch_size, fanouts, mesh=None, seed=0,
                  storage_engine=None, store=None, sampler="khop",
-                 walk_length=4, device_cache=None):
+                 walk_length=4, device_cache=None, edge_cache=None):
         super().__init__(g, batch_size=batch_size, fanouts=fanouts,
                          seed=seed, storage_engine=storage_engine,
                          store=store, sampler=sampler,
@@ -424,7 +492,6 @@ class PallasSubgraphLoader(_LoaderBase):
         import jax.numpy as jnp
         from repro.kernels import ops
         self.indptr = jnp.asarray(g.indptr, jnp.int32)
-        self.indices = jnp.asarray(g.indices, jnp.int32)
         # labels live on device too: the per-batch gather happens inside
         # the jitted prepare, not via host numpy indexing per call
         self.labels = jnp.asarray(g.labels, jnp.int32)
@@ -436,15 +503,38 @@ class PallasSubgraphLoader(_LoaderBase):
         fanouts_ = self.fanouts
         maxd = self.max_degree
 
-        if device_cache is not None and getattr(device_cache, "rows", 0):
-            from repro.storage.devcache import DeviceFeatureCache, pad_pow2
+        use_feat_cache = (device_cache is not None
+                          and getattr(device_cache, "rows", 0))
+        use_edge_cache = (edge_cache is not None
+                          and getattr(edge_cache, "edge_blocks", 0))
+        if use_feat_cache or use_edge_cache:
+            from repro.storage.devcache import pad_pow2
             self._pad_pow2 = pad_pow2
+
+        if use_edge_cache:
+            from repro.storage.devcache import DeviceEdgeBlockCache
+            self.indices = None         # topology stays off-device
+            self.edgecache = DeviceEdgeBlockCache(
+                self.store, indptr=np.asarray(g.indptr, np.int64),
+                block_e=ops.edge_block_size(maxd),
+                blocks=edge_cache.edge_blocks, policy=edge_cache.policy,
+                pinned_fraction=edge_cache.pinned_fraction)
+        else:
+            self.indices = jnp.asarray(g.indices, jnp.int32)
+
+        if use_feat_cache:
+            from repro.storage.devcache import DeviceFeatureCache
             self.features = None        # the whole point: no full upload
             self.devcache = DeviceFeatureCache(
                 self.store, rows=device_cache.rows,
                 policy=device_cache.policy,
                 pinned_fraction=device_cache.pinned_fraction)
+        else:
+            self.features = jnp.asarray(g.features, jnp.float32)
 
+        if use_edge_cache:
+            self._prepare = self._sample = None
+        elif use_feat_cache:
             @jax.jit
             def sample(indptr, indices, labels, targets, key):
                 hops = ops.sample_khop_kernel(indptr, indices, targets,
@@ -455,8 +545,6 @@ class PallasSubgraphLoader(_LoaderBase):
             self._sample = sample
             self._prepare = None
         else:
-            self.features = jnp.asarray(g.features, jnp.float32)
-
             @jax.jit
             def prepare(indptr, indices, features, labels, targets, key):
                 hops = ops.sample_khop_kernel(indptr, indices, targets,
@@ -468,12 +556,13 @@ class PallasSubgraphLoader(_LoaderBase):
                 return hops, hop_feats, batch_labels
 
             self._prepare = prepare
+            self._sample = None
 
     def get_batch(self, idx: int) -> Minibatch:
         targets = self.targets(idx)
         self.impose_storage_cost(idx)
         key = self._jax.random.fold_in(self._key, idx)
-        if self.devcache is None:
+        if self.devcache is None and self.edgecache is None:
             hops, hop_feats, labels = self._prepare(
                 self.indptr, self.indices, self.features, self.labels,
                 self._jnp.asarray(targets), key)
@@ -482,35 +571,99 @@ class PallasSubgraphLoader(_LoaderBase):
         return self._get_batch_cached(targets, key)
 
     def _get_batch_cached(self, targets, key) -> Minibatch:
-        """Sample on device, resolve the subgraph's unique rows through
-        the device cache, gather on device, index per hop.  The sampling
-        kernel and RNG stream are untouched, and the cache returns the
-        exact float32 rows the full upload would — bit-identity holds."""
+        """The cached data plane: sample (through the edge-block cache
+        when configured, else the device-resident edge array), then
+        gather features (through the row cache when configured, else the
+        device-resident table).  The RNG streams are untouched and both
+        caches return the exact bits the full uploads would — bit-identity
+        holds for every cache combination."""
         jnp, np_ = self._jnp, np
-        hops, labels = self._sample(self.indptr, self.indices, self.labels,
-                                    jnp.asarray(targets), key)
-        hop_ids = [np_.asarray(h) for h in hops]
         io0 = _io_snapshot(self.store)
-        dev0 = self.devcache.counters()
+        cache0 = {name: c.counters() for name, c in
+                  (("devcache", self.devcache), ("edgecache", self.edgecache))
+                  if c is not None}
+        if self.edgecache is not None:
+            hops, labels = self._sample_khop_edgecached(targets, key)
+        else:
+            hops, labels = self._sample(self.indptr, self.indices,
+                                        self.labels, jnp.asarray(targets),
+                                        key)
+        hop_ids = [np_.asarray(h) for h in hops]
         uniq = np_.unique(np_.concatenate([h.reshape(-1) for h in hop_ids]))
-        # dispatch-pad the unique set to a power of two (repeating the
-        # last id, so pads are cache hits): U varies every batch, and an
-        # unbucketed width would recompile the downstream take per batch
-        rows = self.devcache.gather_rows(self._pad_pow2(uniq, uniq[-1]),
-                                         n_valid=uniq.size)
-        F = self.devcache.feat_dim
-        hop_feats = []
-        for h in hop_ids:
-            pos = np_.searchsorted(uniq, h.reshape(-1))
-            hop_feats.append(jnp.take(rows, jnp.asarray(pos, jnp.int32),
-                                      axis=0).reshape(h.shape + (F,)))
-        dev1 = self.devcache.counters()
+        if self.devcache is not None:
+            # dispatch-pad the unique set to a power of two (repeating the
+            # last id, so pads are cache hits): U varies every batch, and
+            # an unbucketed width would recompile the downstream take per
+            # batch
+            rows = self.devcache.gather_rows(self._pad_pow2(uniq, uniq[-1]),
+                                             n_valid=uniq.size)
+            F = self.devcache.feat_dim
+            hop_feats = []
+            for h in hop_ids:
+                pos = np_.searchsorted(uniq, h.reshape(-1))
+                hop_feats.append(jnp.take(rows, jnp.asarray(pos, jnp.int32),
+                                          axis=0).reshape(h.shape + (F,)))
+        else:
+            hop_feats = [self._ops.feature_gather_rows(self.features, h)
+                         for h in hops]
         io = _io_delta(self.store, io0) or {}
-        io["devcache"] = {k: dev1[k] - dev0[k] for k in dev1}
+        for name, c0 in cache0.items():
+            c1 = getattr(self, name).counters()
+            io[name] = {k: c1[k] - c0[k] for k in c1}
         trace = SampleTrace(touched_nodes=np_.empty(0, np_.int64),
                             hops=hop_ids, subgraph_nodes=uniq, io=io)
         return Minibatch(targets=targets, hop_ids=list(hops),
                          hop_feats=hop_feats, labels=labels, trace=trace)
+
+    def _sample_khop_edgecached(self, targets, key):
+        """K-hop sampling through the HBM edge-block cache.
+
+        The key/rand derivation matches ``ops.sample_khop_kernel``
+        bit-for-bit; only the kernel's edge reads differ (cache slots
+        instead of the full array), and the staged block contents are
+        identical — so sampled IDs match the uncached path exactly.
+        Hops run at the host level because each hop's frontier must be
+        resolved (admitted) before its kernel dispatches."""
+        jax_, jnp = self._jax, self._jnp
+        frontier = np.asarray(targets, np.int32)
+        hops = [jnp.asarray(frontier)]
+        for i, f in enumerate(self.fanouts):
+            rand = jax_.random.randint(jax_.random.fold_in(key, i),
+                                       frontier.shape + (f,), 0, 2**31 - 1)
+            flat = frontier.reshape(-1)
+            nxt = self._sample_chunk_cached(flat,
+                                            rand.reshape(flat.shape[0], f))
+            frontier = nxt.reshape(frontier.shape + (f,))
+            hops.append(jnp.asarray(frontier))
+        labels = jnp.take(self.labels, jnp.asarray(targets))
+        return hops, labels
+
+    def _sample_chunk_cached(self, flat, rand2d) -> np.ndarray:
+        """One hop through the edge-block cache: plan chunks whose block
+        working set fits the cache, resolve (admit) each chunk's blocks,
+        dispatch the cached kernel per chunk.  Chunk dispatch lengths are
+        pow2-padded with node 0 (whose blocks every plan keeps resident)
+        so retracing stays bounded when the planner has to split."""
+        ec = self.edgecache
+        jnp = self._jnp
+        parts = []
+        for sl, blocks in ec.plan(flat):
+            ec.resolve(blocks)
+            seg = flat[sl]
+            seg_rand = rand2d[sl]
+            n = seg.shape[0]
+            width = 1 << (n - 1).bit_length()
+            if width > n:
+                seg = np.concatenate([seg, np.zeros(width - n, seg.dtype)])
+                seg_rand = jnp.concatenate(
+                    [seg_rand, jnp.zeros((width - n, seg_rand.shape[1]),
+                                         seg_rand.dtype)])
+            out = self._ops.neighbor_sample_cached(
+                self.indptr, ec.table, ec.slot_of,
+                jnp.asarray(seg, jnp.int32), seg_rand,
+                block_e=ec.block_e, max_block=ec.max_block)
+            parts.append(np.asarray(out[:n]))
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
 
 
 # ---------------------------------------------------------------------------

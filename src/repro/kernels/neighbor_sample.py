@@ -44,6 +44,23 @@ from jax.experimental.pallas import tpu as pltpu
 TILE_M = 8
 
 
+def edge_pad(num_edges: int, block_e: int) -> int:
+    """THE edge-array pad rule: zero padding appended so a two-block
+    fetch never runs off the end (at least one block past the data, at
+    least two blocks total).  ``DeviceEdgeBlockCache`` derives its block
+    space from this — the cached kernel's bit-identity depends on both
+    sides using one definition."""
+    pad = (-num_edges) % block_e + block_e
+    if num_edges + pad < 2 * block_e:
+        pad += block_e
+    return pad
+
+
+def edge_block_count(num_edges: int, block_e: int) -> int:
+    """Number of ``block_e``-wide blocks in the padded edge array."""
+    return (num_edges + edge_pad(num_edges, block_e)) // block_e
+
+
 def _kernel(indptr_ref, targets_ref, rand_ref, edges_ref, out_ref,
             blocks_ref, meta_ref, sem, *, block_e: int, tile_m: int,
             max_base: int):
@@ -101,9 +118,7 @@ def neighbor_sample(indptr, indices, targets, rand, *, block_e: int = 512,
     # pad the edge array so the 2-block fetch never runs off the end: for
     # deg > 0, base <= floor((E-1)/block_e)*block_e, so base + 2*block_e
     # <= E_pad; degree-0 offsets at the array end are clamped in-kernel
-    pad = (-E) % block_e + block_e
-    if E + pad < 2 * block_e:
-        pad += block_e
+    pad = edge_pad(E, block_e)
     indices = jnp.pad(indices, (0, pad))
 
     kernel = functools.partial(_kernel, block_e=block_e, tile_m=tile_m,
@@ -127,4 +142,97 @@ def neighbor_sample(indptr, indices, targets, rand, *, block_e: int = 512,
         out_shape=jax.ShapeDtypeStruct((M_pad, S), jnp.int32),
         interpret=interpret,
     )(indptr, targets, rand, indices)
+    return out[:M]
+
+
+# ---------------------------------------------------------------------------
+# cached variant: edge blocks come from an HBM block cache via indirection
+# ---------------------------------------------------------------------------
+
+def _cached_kernel(indptr_ref, slots_ref, targets_ref, rand_ref, cache_ref,
+                   out_ref, blocks_ref, meta_ref, sem, *, block_e: int,
+                   tile_m: int, max_block: int):
+    i = pl.program_id(0)
+
+    def stage(j, carry):
+        t = targets_ref[i * tile_m + j]
+        start = indptr_ref[t]
+        deg = indptr_ref[t + 1] - start
+        b = jnp.minimum(start // block_e, max_block)   # block-unit clamp:
+        # same bound as the uncached kernel's max_base (only binds for
+        # degree-0 targets at the array end)
+        s0 = jnp.maximum(slots_ref[b], 0)       # -1 = not resident; callers
+        s1 = jnp.maximum(slots_ref[b + 1], 0)   # guarantee residency, the
+        # clamp only keeps a misuse from reading out of bounds
+        cp0 = pltpu.make_async_copy(cache_ref.at[s0], blocks_ref.at[j, 0],
+                                    sem)
+        cp0.start()
+        cp0.wait()
+        cp1 = pltpu.make_async_copy(cache_ref.at[s1], blocks_ref.at[j, 1],
+                                    sem)
+        cp1.start()
+        cp1.wait()
+        meta_ref[0, j] = start - b * block_e
+        meta_ref[1, j] = deg
+        meta_ref[2, j] = t
+        return carry
+
+    jax.lax.fori_loop(0, tile_m, stage, 0)
+
+    off = meta_ref[0, :]
+    deg = meta_ref[1, :]
+    tgt = meta_ref[2, :]
+    blocks = blocks_ref[...].reshape(tile_m, 2 * block_e)
+    r = rand_ref[...] % jnp.maximum(deg[:, None], 1)
+    local = off[:, None] + r
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 2 * block_e), 2)
+    onehot = local[:, :, None] == iota
+    picked = jnp.sum(jnp.where(onehot, blocks[:, None, :], 0), axis=2)
+    out_ref[...] = jnp.where(deg[:, None] > 0, picked,
+                             tgt[:, None]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "tile_m",
+                                             "max_block", "interpret"))
+def neighbor_sample_cached(indptr, block_slots, targets, rand, cache, *,
+                           block_e: int, max_block: int,
+                           tile_m: int = TILE_M, interpret: bool = True):
+    """The out-of-core-topology version of ``neighbor_sample``: the edge
+    array stays *off device* and each target's two consecutive edge blocks
+    are read from a ``(C, block_e)`` HBM block cache via the
+    ``block_slots`` (NB+1,) block-id -> slot indirection table (both
+    scalar-prefetched, like the CSR offsets).  Every block a target
+    dereferences must be resident (slot != -1) — the
+    ``storage.devcache.DeviceEdgeBlockCache`` guarantees that by
+    resolving the dispatch's planned block set first.  The staged pair's
+    content equals the uncached kernel's two-block fetch, so sampled IDs
+    are bit-identical.  M is padded up to a ``tile_m`` multiple (pad
+    targets sample node 0, whose blocks (0, 1) are resident by the
+    planner's contract; pads are sliced off)."""
+    M, S = rand.shape
+    m_pad = (-M) % tile_m
+    if m_pad:
+        targets = jnp.pad(targets, (0, m_pad))
+        rand = jnp.pad(rand, ((0, m_pad), (0, 0)))
+    kernel = functools.partial(_cached_kernel, block_e=block_e,
+                               tile_m=tile_m, max_block=max_block)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,              # indptr, slots, targets
+            grid=((M + m_pad) // tile_m,),
+            in_specs=[
+                pl.BlockSpec((tile_m, S), lambda i, *_: (i, 0)),   # rand
+                pl.BlockSpec(memory_space=pltpu.ANY),  # cache stays in HBM
+            ],
+            out_specs=pl.BlockSpec((tile_m, S), lambda i, *_: (i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((tile_m, 2, block_e), jnp.int32),  # block pairs
+                pltpu.SMEM((3, tile_m), jnp.int32),           # off/deg/tgt
+                pltpu.SemaphoreType.DMA,
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M + m_pad, S), jnp.int32),
+        interpret=interpret,
+    )(indptr, block_slots, targets, rand, cache)
     return out[:M]

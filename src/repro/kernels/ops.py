@@ -23,6 +23,8 @@ from repro.kernels.feature_gather import feature_gather_cached as _cached_pl
 from repro.kernels.feature_gather import feature_gather_mean as _gather_pl
 from repro.kernels.feature_gather import feature_gather_rows as _rows_pl
 from repro.kernels.neighbor_sample import neighbor_sample as _sample_pl
+from repro.kernels.neighbor_sample import \
+    neighbor_sample_cached as _sample_cached_pl
 from repro.kernels.ssd_chunk_scan import ssd_chunk_scan as _ssd_pl
 
 _ENABLED = os.environ.get("REPRO_NO_KERNELS", "0") != "1"
@@ -44,14 +46,41 @@ def feature_gather_mean(table, ids):
     return _gather_pl(table, ids, interpret=_interpret())
 
 
+def edge_block_size(max_degree: int) -> int:
+    """The kernels' shared edge-block width: 128-aligned and >= the max
+    neighbor-list length, so any list spans at most two blocks."""
+    return max(128, int(-(-max_degree // 128) * 128))
+
+
 def neighbor_sample(indptr, indices, targets, rand, *, max_degree: int):
     """CSR fanout sample.  block_e sized from max_degree (128-aligned)."""
     if not _ENABLED:
         return ref.neighbor_sample(indptr, indices, targets, rand)
-    block_e = max(128, int(-(-max_degree // 128) * 128))
     return _sample_pl(indptr.astype(jnp.int32), indices.astype(jnp.int32),
                       targets.astype(jnp.int32), rand.astype(jnp.int32),
-                      block_e=block_e, interpret=_interpret())
+                      block_e=edge_block_size(max_degree),
+                      interpret=_interpret())
+
+
+def neighbor_sample_cached(indptr, cache, block_slots, targets, rand, *,
+                           block_e: int, max_block: int):
+    """Out-of-core-topology fanout sample: per-target edge blocks come
+    from the (C, block_e) HBM block cache through the ``block_slots``
+    indirection table instead of the full device-resident edge array.
+    Residency is the caller's contract (``DeviceEdgeBlockCache`` resolves
+    the planned block set before dispatch); results are bit-identical to
+    ``neighbor_sample``."""
+    if not _ENABLED:
+        return ref.neighbor_sample_cached(
+            indptr, block_slots, targets.astype(jnp.int32),
+            rand.astype(jnp.int32), cache, block_e=block_e,
+            max_block=max_block)
+    return _sample_cached_pl(indptr.astype(jnp.int32),
+                             block_slots.astype(jnp.int32),
+                             targets.astype(jnp.int32),
+                             rand.astype(jnp.int32), cache,
+                             block_e=block_e, max_block=max_block,
+                             interpret=_interpret())
 
 
 def sample_khop_kernel(indptr, indices, targets, fanouts, *, key,

@@ -33,6 +33,30 @@ def feature_gather_cached(cache, slot_of, ids):
     return jnp.take(cache, jnp.maximum(slots, 0), axis=0)
 
 
+def neighbor_sample_cached(indptr, block_slots, targets, rand, cache, *,
+                           block_e: int, max_block: int):
+    """Out-of-core-topology sampling through an edge-block cache.
+
+    indptr: (N+1,) int32; block_slots: (NB+1,) int32 block-id -> cache
+    slot indirection; cache: (C, block_e) int32 resident edge blocks;
+    targets: (M,) int32; rand: (M, S) int32.  Every dereferenced block
+    must be resident (unresolved slots clamp to 0, matching the kernel's
+    out-of-bounds guard).  Returns (M, S) int32 — bit-identical to
+    ``neighbor_sample`` over the uncached edge array."""
+    start = jnp.take(indptr, targets)
+    deg = jnp.take(indptr, targets + 1) - start
+    b = jnp.minimum(start // block_e, max_block)
+    lo = jnp.take(cache, jnp.maximum(jnp.take(block_slots, b), 0), axis=0)
+    hi = jnp.take(cache, jnp.maximum(jnp.take(block_slots, b + 1), 0),
+                  axis=0)
+    pair = jnp.concatenate([lo, hi], axis=1)            # (M, 2*block_e)
+    r = rand % jnp.maximum(deg[:, None], 1)
+    local = start[:, None] - (b * block_e)[:, None] + r
+    picked = jnp.take_along_axis(pair, local, axis=1)
+    return jnp.where(deg[:, None] > 0, picked,
+                     targets[:, None]).astype(jnp.int32)
+
+
 def neighbor_sample(indptr, indices, targets, rand):
     """CSR fanout sampling with explicit randomness.
 

@@ -26,58 +26,18 @@ import time
 
 
 def _parse():
+    from repro.core.config import add_pipeline_args
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="graphsage")
-    ap.add_argument("--backend", default="isp",
-                    choices=("host", "isp", "pallas"),
-                    help="GNN data-preparation backend (SubgraphLoader)")
-    ap.add_argument("--storage-engine", default="none",
-                    choices=("none", "dram", "pmem", "mmap", "directio",
-                             "isp", "isp_oracle", "fpga"),
-                    help="simulated storage tier attached to the loader")
-    ap.add_argument("--prefetch", type=int, default=0,
-                    help="async prefetch queue depth (0 = synchronous; "
-                         "2 = double buffering): overlap data preparation "
-                         "with training")
-    ap.add_argument("--graph-store", default="mem", choices=("mem", "disk"),
-                    help="where the graph data lives: 'mem' = DRAM arrays, "
-                         "'disk' = out-of-core DiskStore (block-aligned "
-                         "on-disk layout + live page cache; host backend "
-                         "samples/gathers through real paged reads)")
-    ap.add_argument("--cache-mb", type=float, default=None,
-                    help="disk-store page-cache budget in MB (default: "
-                         "storage spec; set below the on-disk footprint "
-                         "to exercise the beyond-DRAM working set)")
-    ap.add_argument("--cache-policy", default="lru",
-                    choices=("lru", "pinned"),
-                    help="disk-store placement: OS-page-cache-style LRU "
-                         "or §IV-C hot-block pinning + LRU spill")
-    ap.add_argument("--lock-shards", type=int, default=None,
-                    help="disk-store page-cache lock shards (default: "
-                         "storage spec; 1 = single global lock)")
-    ap.add_argument("--store-dir", default=None,
-                    help="directory for the on-disk graph layout "
-                         "(default: a fresh temp dir; reused if it "
-                         "already holds a manifest)")
-    ap.add_argument("--device-cache-rows", type=int, default=0,
-                    help="pallas backend: HBM feature-cache capacity in "
-                         "rows (0 = full-table upload).  Set below the "
-                         "unique-rows-per-batch working set to exercise "
-                         "the device-side out-of-core path; training "
-                         "stays bit-identical to the full upload")
-    ap.add_argument("--device-cache-policy", default="pinned",
-                    choices=("lru", "pinned"),
-                    help="device cache placement: LRU recency or "
-                         "degree-pinned hot set + LRU spill (default)")
-    ap.add_argument("--sampler", default="khop", choices=("khop", "saint"),
-                    help="sampler family: GraphSAGE k-hop fanouts or "
-                         "GraphSAINT random walks (host backend only)")
-    ap.add_argument("--walk-length", type=int, default=4,
-                    help="GraphSAINT walk length (--sampler saint)")
+    # the whole data-plane surface (--backend/--sampler/--fanouts/--batch/
+    # --prefetch/--graph-store/--cache-*/--device-cache-*/
+    # --edge-cache-blocks/--storage-engine/--spec/...) is generated from
+    # the PipelineSpec field table — one definition shared with
+    # benchmarks/bench_backends.py
+    add_pipeline_args(ap, overrides={"backend": "isp"})
     ap.add_argument("--dataset", default="reddit")
     ap.add_argument("--large-scale", action="store_true")
     ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--reduced", action="store_true",
@@ -88,11 +48,21 @@ def _parse():
                     help="mesh shape, e.g. 4x1 (default: devices x 1)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
-    ap.add_argument("--fanouts", default="10,5")
     ap.add_argument("--hidden", type=int, default=128)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
-    return ap.parse_args()
+    args = ap.parse_args()
+    from repro.core.config import (fill_pipeline_flag_defaults,
+                                   spec_from_args)
+    if args.arch == "graphsage":
+        try:
+            args.pipeline_spec = spec_from_args(args)
+        except ValueError as e:
+            ap.error(str(e))
+    # resolve "not given" sentinels for code that reads flags directly
+    # (the LM path's --batch); must run after the spec is assembled
+    fill_pipeline_flag_defaults(args)
+    return args
 
 
 def main():
@@ -125,125 +95,80 @@ def run_gnn(args, mesh):
     import jax.numpy as jnp
 
     from repro import checkpoint as ckpt
-    from repro.core import (GNNConfig, GraphSAGE, build_train_step,
-                            load_dataset, make_loader, train_loop)
+    from repro.core import (GNNConfig, GraphSAGE, build_pipeline,
+                            build_train_step, load_dataset, train_loop)
     from repro.distributed.sharding import ShardingRules
     from repro.optim import adamw
 
-    if args.sampler == "saint":
-        if args.backend != "host":
-            raise SystemExit("[train] --sampler saint is host-backend only "
-                             "(numpy random walks)")
-        # one hop tensor = the whole (M, L+1) walk -> 1-layer GraphSAGE
-        fanouts = (args.walk_length + 1,)
-    else:
-        fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    spec = args.pipeline_spec
+    fanouts = spec.effective_fanouts
     g = load_dataset(args.dataset, large_scale=args.large_scale)
-    store = None
-    store_tmpdir = None
-    device_cache = None
-    if args.device_cache_rows:
-        if args.backend != "pallas":
-            raise SystemExit("[train] --device-cache-rows applies to the "
-                             "pallas backend only")
-        from repro.storage import DeviceCacheSpec
-        device_cache = DeviceCacheSpec(rows=args.device_cache_rows,
-                                       policy=args.device_cache_policy)
-    if args.graph_store == "disk" and args.backend == "isp":
-        print("[train] note: --graph-store disk does not apply to the isp "
-              "backend (mesh shards are device-resident); proceeding "
-              "in-memory")
-    elif (args.graph_store == "disk" and args.backend == "pallas"
-            and device_cache is None):
-        # without a device cache nothing on the pallas path reads through
-        # the store — don't serialize the graph as dead work
-        print("[train] note: pallas@disk needs --device-cache-rows to "
-              "read features through the store; proceeding in-memory "
-              "(full feature-table upload)")
-    elif args.graph_store == "disk":
-        import tempfile
-
-        from repro.storage import open_store
-        store_dir = args.store_dir or tempfile.mkdtemp(
-            prefix=f"graphstore-{args.dataset}-")
-        if args.store_dir is None:
-            store_tmpdir = store_dir       # ours to remove at exit
-        store = open_store("disk", g=g, path=store_dir,
-                           cache_mb=args.cache_mb,
-                           policy=args.cache_policy,
-                           lock_shards=args.lock_shards)
-        print(f"[train] graph store: disk at {store_dir} "
-              f"({store.nbytes_on_disk() / 2**20:.1f} MB on disk, "
-              f"page cache {store.cache_blocks} x {store.block_bytes} B "
-              f"= {store.cache_blocks * store.block_bytes / 2**20:.1f} MB, "
-              f"policy={store.policy}, lock_shards={store.lock_shards})")
-    engine = None
-    if args.storage_engine and args.storage_engine != "none":
-        from repro.storage import make_engine
-        engine = make_engine(args.storage_engine, g,
-                             measured=store is not None, store=store)
-    loader = make_loader(args.backend, g, batch_size=args.batch,
-                         fanouts=fanouts, mesh=mesh, storage_engine=engine,
-                         prefetch=args.prefetch, store=store,
-                         sampler=args.sampler, walk_length=args.walk_length,
-                         device_cache=device_cache)
-    print(f"[train] {g.name}: {g.num_nodes} nodes {g.num_edges} edges, "
-          f"backend={args.backend}, sampler={args.sampler}"
-          + (f", storage={args.storage_engine}" if engine else "")
-          + (f", prefetch={args.prefetch}" if args.prefetch else "")
-          + (f", devcache={args.device_cache_rows} rows "
-             f"({args.device_cache_policy})" if device_cache else ""))
-
-    cfg = GNNConfig(feat_dim=g.feat_dim, hidden=args.hidden,
-                    n_classes=int(g.labels.max()) + 1, fanouts=fanouts)
-    gnn = GraphSAGE(cfg)
-    rules = ShardingRules.default()
-    opt = adamw(args.lr)
-    step_fn = build_train_step(loader, gnn, opt, mesh, rules)
-
-    state = {"params": gnn.init(jax.random.key(0)),
-             "opt": None, "step": jnp.zeros((), jnp.int32)}
-    state["opt"] = opt.init(state["params"])
-    start = 0
-    saver = None
-    if args.ckpt_dir:
-        saver = ckpt.AsyncSaver(args.ckpt_dir)
-        latest = ckpt.latest_step(args.ckpt_dir)
-        if latest is not None:
-            state, start = ckpt.restore(args.ckpt_dir)
-            start = int(start)
-            print(f"[train] resumed from step {start}")
-
-    def on_step(i, state, metrics):
-        if (i + 1) % args.log_every == 0 or i + 1 == args.steps:
-            m = {k: float(v) for k, v in metrics.items()}
-            print(f"  step {i+1:5d} loss={m['loss']:.4f} "
-                  f"acc={m['acc']:.3f} |g|={m['grad_norm']:.3f}")
-        if saver and (i + 1) % args.ckpt_every == 0:
-            saver.save_async(i + 1, state)
-
+    pipe = build_pipeline(spec, g, mesh=mesh)
     try:
-        try:
-            with mesh:
-                state, stats = train_loop(loader, step_fn, state,
-                                          steps=args.steps, start=start,
-                                          on_step=on_step)
-        finally:
-            loader.close()
+        for note in pipe.notes:
+            print(f"[train] note: {note}")
+        print(f"[train] {g.name}: {g.num_nodes} nodes {g.num_edges} edges, "
+              f"{pipe.describe()}")
+        store = pipe.store
+        if store is not None:
+            print(f"[train] graph store: disk at {store.path} "
+                  f"({store.nbytes_on_disk() / 2**20:.1f} MB on disk, "
+                  f"page cache {store.cache_blocks} x {store.block_bytes} B "
+                  f"= {store.cache_blocks * store.block_bytes / 2**20:.1f} "
+                  f"MB, policy={store.policy}, "
+                  f"lock_shards={store.lock_shards})")
+
+        cfg = GNNConfig(feat_dim=g.feat_dim, hidden=args.hidden,
+                        n_classes=int(g.labels.max()) + 1, fanouts=fanouts)
+        gnn = GraphSAGE(cfg)
+        rules = ShardingRules.default()
+        opt = adamw(args.lr)
+        step_fn = build_train_step(pipe, gnn, opt, mesh, rules)
+
+        state = {"params": gnn.init(jax.random.key(0)),
+                 "opt": None, "step": jnp.zeros((), jnp.int32)}
+        state["opt"] = opt.init(state["params"])
+        start = 0
+        saver = None
+        if args.ckpt_dir:
+            # every checkpoint manifest records the exact data-plane spec
+            # that produced it
+            saver = ckpt.AsyncSaver(
+                args.ckpt_dir,
+                manifest_extra={"pipeline_spec": spec.to_dict()})
+            latest = ckpt.latest_step(args.ckpt_dir)
+            if latest is not None:
+                state, start = ckpt.restore(args.ckpt_dir)
+                start = int(start)
+                print(f"[train] resumed from step {start}")
+
+        def on_step(i, state, metrics):
+            if (i + 1) % args.log_every == 0 or i + 1 == args.steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                print(f"  step {i+1:5d} loss={m['loss']:.4f} "
+                      f"acc={m['acc']:.3f} |g|={m['grad_norm']:.3f}")
+            if saver and (i + 1) % args.ckpt_every == 0:
+                saver.save_async(i + 1, state)
+
+        with mesh:
+            state, stats = train_loop(pipe, step_fn, state,
+                                      steps=args.steps, start=start,
+                                      on_step=on_step)
         if saver:
             saver.save_async(args.steps, state)
             saver.wait()
-        loader_stats = loader.stats()
+        loader_stats = pipe.stats()
         print(f"[train] {stats.steps} steps in {stats.wall_s:.1f}s "
               f"({stats.steps_per_s:.2f} steps/s, consumer idle "
               f"{stats.idle_fraction:.1%}) loader={loader_stats}")
-        dc = loader_stats.get("devcache")
-        if dc:
-            print(f"[train] device cache: {dc['capacity_rows']} rows "
-                  f"({dc['policy']}, {dc['pinned_rows']} pinned), "
-                  f"hits={dc['hits']} misses={dc['misses']} "
-                  f"evictions={dc['evictions']} "
-                  f"({dc['bytes_uploaded'] / 2**20:.1f} MB uploaded)")
+        for kind, noun in (("devcache", "rows"), ("edgecache", "blocks")):
+            dc = loader_stats.get(kind)
+            if dc:
+                print(f"[train] device {kind}: {dc['capacity_rows']} {noun} "
+                      f"({dc['policy']}, {dc['pinned_rows']} pinned), "
+                      f"hits={dc['hits']} misses={dc['misses']} "
+                      f"evictions={dc['evictions']} "
+                      f"({dc['bytes_uploaded'] / 2**20:.1f} MB uploaded)")
         if store is not None:
             io = store.io_counters()
             print(f"[train] disk-store I/O: {io['requests']} requests, "
@@ -251,16 +176,12 @@ def run_gnn(args, mesh):
                   f"({io['bytes_fetched'] / 2**20:.1f} MB from disk), "
                   f"cache hits={io['hits']} misses={io['misses']} "
                   f"evictions={io['evictions']}")
-            if engine is not None and hasattr(engine, "report"):
-                print(f"[train] measured-vs-simulated: {engine.report()}")
+            if pipe.engine is not None and hasattr(pipe.engine, "report"):
+                print(f"[train] measured-vs-simulated: {pipe.engine.report()}")
     finally:
         # a failed or interrupted run must not leak fds or the (possibly
         # multi-GB) temp copy of the graph
-        if store is not None:
-            store.close()
-        if store_tmpdir is not None:
-            import shutil
-            shutil.rmtree(store_tmpdir, ignore_errors=True)
+        pipe.close()
 
 
 def run_lm(args, mesh):

@@ -5,7 +5,8 @@ paper's six design points (DESIGN.md §2)."""
 from repro.storage.blockdev import (EDGE_ENTRY_BYTES, BlockTrace, LRUCache,
                                     PinnedCache, block_trace,
                                     select_pinned_blocks)
-from repro.storage.devcache import DeviceFeatureCache
+from repro.storage.devcache import (DeviceArrayCache, DeviceEdgeBlockCache,
+                                    DeviceFeatureCache, edge_block_count)
 from repro.storage.e2e import (E2EResult, capacity_report, e2e_train,
                                feature_gather_time, gnn_step_flops,
                                gpu_step_time)

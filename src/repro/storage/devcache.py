@@ -1,36 +1,42 @@
-"""Device-resident feature cache: the HBM analogue of the DiskStore's
-page cache.
+"""Device-resident array caches: the HBM analogue of the DiskStore's
+page cache, one design instantiated per array family.
 
-The pallas data plane used to upload the **entire** feature table to
-device memory at init, so the device path could not train beyond HBM
-capacity.  ``DeviceFeatureCache`` makes the device backend a real
-out-of-core tier: a fixed-capacity ``(C, F)`` HBM-resident row cache plus
-a device-side ``node_id -> slot`` indirection table, with host-managed
-admission/eviction reusing the ``LRUCache``/``PinnedCache`` policy
-machinery from ``storage.blockdev`` (the same policies the host page
-cache runs — DRAM-over-SSD and HBM-over-host are two instances of one
-design).  The default policy pins the hottest-degree rows, per the
-paper's skewed-access characterization: hub rows dominate the gather
-stream in power-law graphs.
+``DeviceArrayCache`` is the generic tier: a fixed-capacity ``(C, W)``
+HBM-resident entry cache plus a device-side ``entry_id -> slot``
+indirection table, with **host-managed, batched** admission/eviction —
+the LRU/pinned bookkeeping is vectorized numpy over whole id batches
+(stamp arrays + argpartition victim selection), not a per-id Python
+loop, so admission overhead stays flat into the 10-100k
+unique-entries-per-batch regime (measured by the benchmark's
+``--admission-bench`` rows).  The default pinned policy stages the
+hottest entries permanently, per the paper's skewed-access
+characterization: hub structures dominate power-law request streams.
 
-Read path (``gather_rows``): a batch's unique node ids are resolved
-against the host mirror — hits only touch recency; misses are batched,
-fetched through the backing ``GraphStore`` (in-memory arrays **or** real
-paged ``DiskStore`` reads), and written into victim slots by one
-jit-compiled scatter (host->device copies that, under a
-``PrefetchingLoader``, run in the prefetch worker and overlap the
-consumer's compute).  The rows are then gathered **on device** by the
-``feature_gather_cached`` Pallas kernel (indirection lookup + tiled row
-gather) — the full table never crosses to the device.
+Two instantiations — the cache is keyed by *(array, entry id)*, and
+"entry" means whatever unit that array is read in:
+
+* ``DeviceFeatureCache`` — entries are feature *rows* ``(rows, F)
+  float32``; the batch's unique node ids resolve against the host
+  mirror, misses batch-fetch through the backing ``GraphStore``
+  (in-memory arrays **or** real paged ``DiskStore`` reads) and scatter
+  into victim slots by one jit-compiled update, and the rows are
+  gathered **on device** by the ``feature_gather_cached`` Pallas kernel.
+* ``DeviceEdgeBlockCache`` — entries are CSR *edge blocks*
+  ``(blocks, BLOCK_E) int32`` of the (padded) ``indices`` array: the
+  ``neighbor_sample_cached`` kernel reads its two per-target edge blocks
+  through the same slot indirection, so the sampling kernel too runs
+  beyond HBM (the out-of-core *topology* path).  ``plan`` chunks a
+  frontier so each kernel dispatch's block working set fits the
+  non-pinned budget.
 
 Residency contract: ids are resolved in segments whose non-pinned count
-never exceeds the LRU capacity.  Touched rows land at the MRU end and
-installs evict strictly from the LRU end, so by the time a segment is
-dispatched every one of its rows is resident — even when the batch's
-working set exceeds the whole cache (the segments are resolved and
-gathered in order).  Bit-identity: rows cross host->device with
-unchanged float32 bits and the scatter/gather path copies them verbatim,
-so cached training matches full-upload training exactly at equal seeds.
+never exceeds the LRU capacity.  Hits are re-stamped *before* victims
+are selected and victims are the oldest-stamped non-pinned slots, so by
+the time a segment (or a planned sampling chunk) is dispatched every one
+of its entries is resident — even when the batch's working set exceeds
+the whole cache.  Bit-identity: entries cross host->device with
+unchanged bits and the scatter/gather paths copy them verbatim, so
+cached training matches the full-upload path exactly at equal seeds.
 """
 
 from __future__ import annotations
@@ -40,7 +46,6 @@ import threading
 
 import numpy as np
 
-from repro.storage.blockdev import LRUCache, PinnedCache
 from repro.storage.specs import DEFAULT, DeviceCacheSpec
 
 
@@ -57,52 +62,43 @@ def pad_pow2(arr: np.ndarray, fill) -> np.ndarray:
     return np.concatenate([arr, pad])
 
 
-class _RowHeatIndex:
-    """Adapter presenting feature *rows* as unit blocks to the
-    ``PinnedCache`` selection machinery: with ``block_bytes=1`` and byte
-    range ``[u, u+1)``, node u's "block" is exactly its row id, and the
-    degree-ordered greedy pinning picks the hottest rows."""
-
-    def __init__(self, store):
-        self._store = store
-
-    def degrees(self) -> np.ndarray:
-        return self._store.degrees()
-
-    def edge_byte_range(self, u: int, entry_bytes: int) -> tuple[int, int]:
-        return (u, u + 1)
+# the kernels own the edge-array pad rule; re-exported here because the
+# block cache's public surface is the storage package
+from repro.kernels.neighbor_sample import edge_block_count  # noqa: E402
 
 
-class DeviceFeatureCache:
-    """HBM-resident hot-row cache over a ``GraphStore`` feature table."""
+class DeviceArrayCache:
+    """Generic HBM entry cache over one backing array, keyed by entry id.
 
-    def __init__(self, backing, *, rows: int | None = None,
-                 policy: str | None = None,
-                 pinned_fraction: float | None = None,
-                 spec: DeviceCacheSpec = DEFAULT.devcache):
-        """``backing`` is anything with ``num_nodes`` / ``feat_dim`` /
-        ``degrees()`` / ``gather_features(ids)`` — a ``CSRGraph``, an
-        ``InMemoryStore``, or a ``DiskStore`` (then every miss is a real
-        paged disk read and shows up in the store's I/O counters)."""
+    Subclasses supply the array geometry (``num_entries`` entries of
+    ``width`` elements), a ``fetch(ids) -> (n, width)`` miss reader, and
+    a per-entry ``heat`` vector for pinned placement.  This class owns
+    the device state (``table``/``slot_of``), the vectorized host
+    mirror, the admission/eviction policy, and the counters."""
+
+    entry_noun = "entries"
+
+    def __init__(self, *, array: str, num_entries: int, width: int, dtype,
+                 fetch, heat=None, capacity: int, policy: str = "lru",
+                 pinned_fraction: float = 0.5):
         import jax
         import jax.numpy as jnp
-        from repro.kernels import ops
 
-        self.backing = backing
-        self.capacity = int(spec.rows if rows is None else rows)
-        self.policy = policy or spec.policy
+        self.array = array
+        self.capacity = int(capacity)
+        self.policy = policy
         if self.policy not in ("lru", "pinned"):
             raise ValueError(f"unknown device-cache policy {self.policy!r};"
                              " have ('lru', 'pinned')")
         if self.capacity < 1:
-            raise ValueError("device cache needs at least one row")
-        frac = (spec.pinned_fraction if pinned_fraction is None
-                else pinned_fraction)
-        n = int(backing.num_nodes)
-        F = int(backing.feat_dim)
-        self.num_nodes, self.feat_dim = n, F
+            raise ValueError(
+                f"device {array} cache needs at least one {self.entry_noun}")
+        n = int(num_entries)
+        W = int(width)
+        self.num_entries, self.width = n, W
+        self._fetch = fetch
+        self._itemsize = np.dtype(dtype).itemsize
         self._jnp = jnp
-        self._ops = ops
         self._lock = threading.Lock()
         self.hits = self.misses = self.evictions = 0
         self.preload_rows = 0
@@ -110,29 +106,43 @@ class DeviceFeatureCache:
 
         if self.policy == "pinned":
             if self.capacity < 2:
-                raise ValueError("pinned policy needs capacity >= 2 rows "
-                                 "(use policy='lru' for degenerate caches)")
-            pin_budget = int(round(self.capacity * frac))
-            # raises if pin_budget > capacity: pins are never evicted
-            self._mirror = PinnedCache(_RowHeatIndex(backing), self.capacity,
-                                       block_bytes=1, entry_bytes=1,
-                                       pinned_budget=pin_budget)
-            self._pinned_ids = frozenset(self._mirror._pinned)
-            self._lru_rows = self.capacity - len(self._pinned_ids)
+                raise ValueError(
+                    f"pinned policy needs capacity >= 2 {self.entry_noun} "
+                    "(use policy='lru' for degenerate caches)")
+            pin_budget = int(round(self.capacity * pinned_fraction))
+            if pin_budget > self.capacity:
+                raise ValueError(
+                    f"pinned budget {pin_budget} exceeds cache capacity "
+                    f"{self.capacity} {self.entry_noun}; pins are never "
+                    "evicted, so shrink pinned_fraction or grow the cache")
+            heat = np.asarray(heat if heat is not None else np.zeros(n))
+            order = np.argsort(-heat, kind="stable")
+            pinned_ids = np.sort(order[:min(pin_budget, n)]).astype(np.int64)
         else:
-            self._mirror = LRUCache(self.capacity)
-            self._pinned_ids = frozenset()
-            self._lru_rows = self.capacity
-        if self._lru_rows < 1:
+            pinned_ids = np.empty(0, np.int64)
+        self._pinned_ids = pinned_ids
+        self._pinned_mask = np.zeros(n + 1, bool)
+        self._pinned_mask[pinned_ids] = True
+        self._lru_capacity = self.capacity - pinned_ids.size
+        if self._lru_capacity < 1:
             raise ValueError(
-                f"pinned set ({len(self._pinned_ids)} rows) leaves no LRU "
-                f"slots in a {self.capacity}-row cache; lower "
-                "pinned_fraction or grow the cache")
+                f"pinned set ({pinned_ids.size} {self.entry_noun}) leaves "
+                f"no LRU slots in a {self.capacity}-{self.entry_noun} "
+                "cache; lower pinned_fraction or grow the cache")
 
-        self._free = list(range(self.capacity - 1, -1, -1))
-        # +1 entry: index n is the scatter-padding sentinel, never queried
+        # vectorized host mirror: id -> slot, slot -> id/stamp/pinned
+        self._host_slot = np.full(n + 1, -1, np.int64)
+        self._slot_entry = np.full(self.capacity, -1, np.int64)
+        self._slot_stamp = np.zeros(self.capacity, np.int64)
+        self._slot_pinned = np.zeros(self.capacity, bool)
+        self._free = np.arange(self.capacity)
+        self._free_ptr = 0              # slots [_free_ptr:] still free
+        self._clock = 0
+
+        # device state: +1 indirection entry — index n is the
+        # scatter-padding sentinel, never queried by a real id
         self.slot_of = jnp.full((n + 1,), -1, jnp.int32)
-        self.table = jnp.zeros((self.capacity, F), jnp.float32)
+        self.table = jnp.zeros((self.capacity, W), dtype)
         donate = (0, 1) if jax.default_backend() == "tpu" else ()
 
         @functools.partial(jax.jit, donate_argnums=donate)
@@ -143,99 +153,176 @@ class DeviceFeatureCache:
             return table, slot_of
 
         self._update = _update
-        if self._pinned_ids:
+        if pinned_ids.size:
             self._preload_pinned()
 
-    # -- admission / eviction (host-managed) --------------------------------
+    # -- admission / eviction (host-managed, batched) ------------------------
     def _preload_pinned(self) -> None:
-        """Stage the pinned hot rows eagerly (the §IV-C runtime stages its
-        scratchpad before training starts).  The fetches are real backing
-        reads but count as ``preload_rows``, not misses."""
+        """Stage the pinned hot entries eagerly (the §IV-C runtime stages
+        its scratchpad before training starts).  The fetches are real
+        backing reads but count as ``preload_rows``, not misses."""
         with self._lock:
-            self._resolve(np.fromiter(sorted(self._pinned_ids), np.int64))
+            self._resolve(self._pinned_ids)
+            self._slot_pinned[self._host_slot[self._pinned_ids]] = True
             self.preload_rows = self.misses
             self.hits = self.misses = self.evictions = 0
 
     def _segments(self, ids: np.ndarray):
         """Split ``ids`` (order preserved) so each segment's non-pinned
         count fits the LRU capacity — the residency contract: a segment's
-        installs can then only evict rows outside the segment (or rows of
-        it not yet touched, which simply re-miss), never a row between
-        its resolution and its gather."""
-        budget = self._lru_rows
-        start = used = 0
-        for k, u in enumerate(ids):
-            cost = 0 if int(u) in self._pinned_ids else 1
-            if used + cost > budget:
-                yield ids[start:k]
-                start, used = k, 0
-            used += cost
-        yield ids[start:]
+        installs can then only evict entries outside the segment, never
+        one between its resolution and its gather."""
+        nonpinned = np.flatnonzero(~self._pinned_mask[ids])
+        cuts = nonpinned[self._lru_capacity::self._lru_capacity]
+        if cuts.size == 0:
+            yield ids
+            return
+        yield from np.split(ids, cuts)
 
     def _resolve(self, seg: np.ndarray, counted: int | None = None) -> None:
-        """Make every id in ``seg`` resident: touch hits for recency,
-        batch-fetch misses from the backing store, install them into free
-        or victim slots, and push one scatter update to the device.
+        """Make every id in ``seg`` resident, in one batched pass: stamp
+        hits at the MRU end, pick victim slots for all misses at once
+        (free slots first, then the oldest-stamped non-pinned slots),
+        batch-fetch the missed entries from the backing store, and push
+        one scatter update to the device.
 
-        Only the first ``counted`` ids contribute to the hit/miss
-        counters (default: all) — positions beyond that are dispatch
-        filler, kept resident for the kernel but excluded from the
-        metrics so reported hit rates reflect real requests only."""
+        Only the first ``counted`` ids contribute to the hit/miss/
+        eviction counters (default: all) — positions beyond that are
+        dispatch filler, kept resident for the kernel but excluded from
+        the metrics so reported hit rates reflect real requests only."""
         if counted is None:
             counted = seg.size
-        miss_ids: list[int] = []
-        miss_slots: list[int] = []
-        evict_ids: list[int] = []
-        n_miss = n_evict = 0
-        for k, u in enumerate(seg):
-            u = int(u)
-            slot = self._mirror.get(u)
-            if slot is not None:
-                if k < counted:
-                    self.hits += 1
-                continue
-            evicted = self._mirror.put(u, -1)
-            if evicted is None:
-                slot = self._free.pop()
-            else:
-                victim, slot = evicted
-                evict_ids.append(victim)
-                if k < counted:
-                    n_evict += 1
-            self._mirror.put(u, slot)       # u present: fixes the payload
-            miss_ids.append(u)
-            miss_slots.append(slot)
-            if k < counted:
-                n_miss += 1
-        self.misses += n_miss
-        self.evictions += n_evict
-        if not miss_ids:
+        slots = self._host_slot[seg]
+        hit_mask = slots >= 0
+        hit_slots = slots[hit_mask]
+        # hits move to the MRU end *before* victim selection, preserving
+        # the sequential-LRU outcome for the whole segment at once
+        self._slot_stamp[hit_slots] = self._clock + np.arange(hit_slots.size)
+        self._clock += int(hit_slots.size)
+        # a repeated id (the loader's pow2 dispatch padding) must install
+        # exactly once: only the first occurrence of a missing id is a
+        # real miss — later copies are resident by dispatch time (hits).
+        # Double-installing would leave ghost slots whose eviction clears
+        # slot_of[id] while the id still looks resident.
+        order = np.argsort(seg, kind="stable")
+        dup = np.zeros(seg.size, bool)
+        dup[order[1:]] = seg[order][1:] == seg[order][:-1]
+        miss_mask = ~hit_mask & ~dup
+        miss_ids = seg[miss_mask]
+        self.hits += int(np.count_nonzero((hit_mask | (~hit_mask & dup))
+                                          [:counted]))
+        n_miss_counted = int(np.count_nonzero(miss_mask[:counted]))
+        self.misses += n_miss_counted
+        m = int(miss_ids.size)
+        if m == 0:
             return
-        rows = np.ascontiguousarray(
-            self.backing.gather_features(np.asarray(miss_ids, np.int64)),
-            np.float32)
-        self._push(miss_ids, miss_slots, evict_ids, rows)
+
+        n_free = self.capacity - self._free_ptr
+        take = min(n_free, m)
+        new_slots = self._free[self._free_ptr:self._free_ptr + take]
+        self._free_ptr += take
+        n_evict = m - take
+        if n_evict:
+            occupied = np.flatnonzero((self._slot_entry >= 0)
+                                      & ~self._slot_pinned)
+            oldest = occupied[np.argpartition(
+                self._slot_stamp[occupied], n_evict - 1)[:n_evict]]
+            victims = self._slot_entry[oldest]
+            self._host_slot[victims] = -1
+            self._slot_entry[oldest] = -1
+            new_slots = np.concatenate([new_slots, oldest])
+            evict_ids = victims
+            # counted misses consume free slots first (they are a prefix
+            # of the segment), so only their overflow displaces entries
+            self.evictions += min(n_evict, max(0, n_miss_counted - n_free))
+        else:
+            evict_ids = np.empty(0, np.int64)
+        self._slot_stamp[new_slots] = self._clock + np.arange(m)
+        self._clock += m
+        self._host_slot[miss_ids] = new_slots
+        self._slot_entry[new_slots] = miss_ids
+        rows = np.ascontiguousarray(self._fetch(miss_ids))
+        self._push(miss_ids, new_slots, evict_ids, rows)
 
     def _push(self, miss_ids, miss_slots, evict_ids, rows) -> None:
-        """One jitted scatter installs the fetched rows and repairs the
+        """One jitted scatter installs the fetched entries and repairs the
         indirection table.  Update lengths are padded to powers of two
         (pad rows rewrite the last slot, pad ids hit the sentinel entry)
         so retracing stays bounded across batch-to-batch miss counts."""
         jnp = self._jnp
         m = len(miss_ids)
         width = 1 << (m - 1).bit_length()
-        sent = self.num_nodes
+        sent = self.num_entries
         slots = pad_pow2(np.asarray(miss_slots, np.int32), miss_slots[-1])
         new_ids = pad_pow2(np.asarray(miss_ids, np.int32), sent)
-        ev = np.asarray(evict_ids + [sent] * (width - len(evict_ids)),
-                        np.int32)
+        ev = np.concatenate([np.asarray(evict_ids, np.int32),
+                             np.full(width - len(evict_ids), sent, np.int32)])
         rows = pad_pow2(rows, rows[-1])
         self.table, self.slot_of = self._update(
             self.table, self.slot_of, jnp.asarray(slots), jnp.asarray(rows),
             jnp.asarray(ev), jnp.asarray(new_ids))
-        self.bytes_uploaded += int(m) * self.feat_dim * 4
+        self.bytes_uploaded += int(m) * self.width * self._itemsize
 
-    # -- read path -----------------------------------------------------------
+    # -- read paths ----------------------------------------------------------
+    def resolve(self, ids: np.ndarray) -> None:
+        """Admission without a gather: make ``ids`` resident (segmented by
+        the residency contract).  The sampling kernel reads the entries
+        through ``table``/``slot_of`` itself."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        with self._lock:
+            for seg in self._segments(ids):
+                if seg.size:
+                    self._resolve(seg)
+
+    # -- accounting ----------------------------------------------------------
+    def counters(self) -> dict:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "preload_rows": self.preload_rows,
+                    "bytes_uploaded": self.bytes_uploaded}
+
+    def stats(self) -> dict:
+        return {"array": self.array, "policy": self.policy,
+                "capacity_rows": self.capacity,
+                "pinned_rows": int(self._pinned_ids.size),
+                **self.counters()}
+
+
+class DeviceFeatureCache(DeviceArrayCache):
+    """HBM-resident hot-row cache over a ``GraphStore`` feature table."""
+
+    entry_noun = "rows"
+
+    def __init__(self, backing, *, rows: int | None = None,
+                 policy: str | None = None,
+                 pinned_fraction: float | None = None,
+                 spec: DeviceCacheSpec = DEFAULT.devcache):
+        """``backing`` is anything with ``num_nodes`` / ``feat_dim`` /
+        ``degrees()`` / ``gather_features(ids)`` — a ``CSRGraph``, an
+        ``InMemoryStore``, or a ``DiskStore`` (then every miss is a real
+        paged disk read and shows up in the store's I/O counters).  Heat
+        for the pinned policy is node degree: hub rows dominate the
+        gather stream in power-law graphs."""
+        import jax.numpy as jnp
+        from repro.kernels import ops
+
+        self.backing = backing
+        self._ops = ops
+        n = int(backing.num_nodes)
+        F = int(backing.feat_dim)
+        self.num_nodes, self.feat_dim = n, F
+        super().__init__(
+            array="features", num_entries=n, width=F, dtype=jnp.float32,
+            fetch=lambda ids: np.ascontiguousarray(
+                backing.gather_features(np.asarray(ids, np.int64)),
+                np.float32),
+            heat=backing.degrees(),
+            capacity=int(spec.rows if rows is None else rows),
+            policy=policy or spec.policy,
+            pinned_fraction=(spec.pinned_fraction if pinned_fraction is None
+                             else pinned_fraction))
+
     def gather_rows(self, ids: np.ndarray, n_valid: int | None = None):
         """ids: (U,) host node ids -> (U, F) float32 device array, gathered
         on-device through the cache; misses are admitted along the way.
@@ -267,14 +354,96 @@ class DeviceFeatureCache:
                     jnp.asarray(seg, jnp.int32))[:n])
         return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
 
-    # -- accounting ----------------------------------------------------------
-    def counters(self) -> dict:
-        with self._lock:
-            return {"hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions,
-                    "preload_rows": self.preload_rows,
-                    "bytes_uploaded": self.bytes_uploaded}
 
-    def stats(self) -> dict:
-        return {"policy": self.policy, "capacity_rows": self.capacity,
-                "pinned_rows": len(self._pinned_ids), **self.counters()}
+class DeviceEdgeBlockCache(DeviceArrayCache):
+    """HBM-resident edge-*block* cache over the CSR topology arrays.
+
+    Entries are ``block_e``-wide int32 chunks of the padded ``indices``
+    array — exactly the unit the ``neighbor_sample`` kernel stages per
+    target (two consecutive blocks cover any neighbor list with
+    ``max_degree <= block_e``).  The cached sampling kernel looks each
+    block up through ``slot_of`` and DMAs the *cache* row, so the full
+    edge array never crosses to the device: topology misses are fetched
+    through the backing ``GraphStore`` (real paged reads over a
+    ``DiskStore``) and admitted like feature rows.  Block heat for the
+    pinned policy is the max degree of the nodes whose neighbor lists
+    touch the block — hub lists make hub blocks."""
+
+    entry_noun = "blocks"
+
+    def __init__(self, backing, *, indptr, block_e: int,
+                 blocks: int, policy: str = "lru",
+                 pinned_fraction: float = 0.5):
+        indptr = np.asarray(indptr, np.int64)
+        self._indptr = indptr
+        self.block_e = int(block_e)
+        E = int(indptr[-1])
+        nb = edge_block_count(E, self.block_e)
+        self.num_blocks = nb
+        # the kernel clamps a degree-0 tail target's base block here, so
+        # the staged pair (max_block, max_block+1) always exists
+        self.max_block = nb - 2
+        deg = np.diff(indptr)
+        heat = np.zeros(nb, np.int64)
+        if deg.size:
+            b0 = np.minimum(indptr[:-1] // self.block_e, self.max_block)
+            np.maximum.at(heat, b0, deg)
+            np.maximum.at(heat, b0 + 1, deg)
+        import jax.numpy as jnp
+
+        self.backing = backing
+        super().__init__(
+            array="topology", num_entries=nb, width=self.block_e,
+            dtype=jnp.int32,
+            fetch=lambda ids: np.ascontiguousarray(
+                backing.gather_edge_blocks(np.asarray(ids, np.int64),
+                                           self.block_e), np.int32),
+            heat=heat, capacity=int(blocks), policy=policy,
+            pinned_fraction=pinned_fraction)
+        if self._lru_capacity < 4:
+            raise ValueError(
+                f"edge-block cache needs >= 4 non-pinned blocks (one "
+                f"target's staged pair + the tile-padding pair); got "
+                f"{self._lru_capacity} of {self.capacity} — grow the "
+                "cache or lower pinned_fraction")
+
+    def plan(self, targets: np.ndarray) -> list[tuple[slice, np.ndarray]]:
+        """Chunk a flat frontier so each kernel dispatch's unique block
+        working set fits the non-pinned budget (all of a dispatch's
+        blocks must be resident simultaneously, unlike the row gather's
+        per-segment residency).  Returns ``[(slice, block_ids), ...]``;
+        every chunk's block list includes blocks (0, 1), which tile
+        padding (node 0) dereferences."""
+        t = np.asarray(targets, np.int64).reshape(-1)
+        b0 = np.minimum(self._indptr[t] // self.block_e, self.max_block)
+        budget = self._lru_capacity
+        pinned = self._pinned_mask
+        # fast path (the common case): the whole frontier's block set fits
+        # one dispatch — vectorized, no per-target loop
+        needed = np.unique(np.concatenate([b0, b0 + 1, [0, 1]]))
+        if np.count_nonzero(~pinned[needed]) <= budget:
+            return [(slice(0, t.size), needed)]
+        chunks: list[tuple[slice, np.ndarray]] = []
+
+        def fresh() -> tuple[set, int]:
+            blk = {0, 1}
+            return blk, sum(1 for b in blk if not pinned[b])
+
+        blk, used = fresh()
+        cur = 0
+        for k in range(t.size):
+            pair = (int(b0[k]), int(b0[k]) + 1)
+            need = [b for b in pair if b not in blk]
+            cost = sum(1 for b in need if not pinned[b])
+            if used + cost > budget and k > cur:
+                chunks.append((slice(cur, k),
+                               np.fromiter(sorted(blk), np.int64)))
+                blk, used = fresh()
+                cur = k
+                need = [b for b in pair if b not in blk]
+                cost = sum(1 for b in need if not pinned[b])
+            blk.update(need)
+            used += cost
+        chunks.append((slice(cur, t.size),
+                       np.fromiter(sorted(blk), np.int64)))
+        return chunks

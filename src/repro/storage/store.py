@@ -77,6 +77,8 @@ class GraphStore(Protocol):
 
     def gather_labels(self, ids) -> np.ndarray: ...
 
+    def gather_edge_blocks(self, blocks, block_e: int) -> np.ndarray: ...
+
     def io_counters(self) -> dict: ...
 
     def stats(self) -> dict: ...
@@ -126,6 +128,9 @@ class InMemoryStore:
 
     def gather_labels(self, ids):
         return self.g.gather_labels(ids)
+
+    def gather_edge_blocks(self, blocks, block_e: int):
+        return self.g.gather_edge_blocks(blocks, block_e)
 
     def io_counters(self) -> dict:
         return {"requests": 0, "block_fetches": 0, "bytes_fetched": 0,
@@ -447,6 +452,15 @@ class DiskStore:
             vals[j] = self._read_array("labels", int(u), int(u) + 1)[0]
         return vals[inverse].reshape(ids.shape)
 
+    def gather_edge_blocks(self, blocks, block_e: int) -> np.ndarray:
+        """``block_e``-wide int32 chunks of ``indices``, zero-padded past
+        the array end — read through the page cache, so device edge-block
+        cache misses are real paged disk I/O and land in the counters."""
+        from repro.core.graph import read_edge_blocks
+        return read_edge_blocks(
+            lambda lo, hi: self._read_array("indices", lo, hi),
+            blocks, block_e, self.num_edges)
+
     # -- accounting ----------------------------------------------------------
     def io_counters(self) -> dict:
         hits = misses = evictions = 0
@@ -477,13 +491,17 @@ class DiskStore:
                 "nbytes_on_disk": self.nbytes_on_disk(),
                 **self.io_counters()}
 
-    def to_csr(self) -> CSRGraph:
-        """Materialize the full graph in memory (device backends and
-        tests; defeats the point for the out-of-core host path)."""
+    def to_csr(self, include_features: bool = True) -> CSRGraph:
+        """Materialize the graph in memory (device backends and tests;
+        defeats the point for the out-of-core host path).  With
+        ``include_features=False`` the (usually dominant) feature table is
+        left on disk — the right call when a device feature-cache tier
+        will fetch rows on demand anyway."""
         read = {k: np.fromfile(os.path.join(self.path, a["file"]),
                                dtype=self._dtype[k],
                                count=int(np.prod(a["shape"])))
-                for k, a in self._arrays.items()}
+                for k, a in self._arrays.items()
+                if include_features or k != "features"}
         feats = read.get("features")
         if feats is not None:
             feats = feats.reshape(self._arrays["features"]["shape"])
@@ -521,9 +539,11 @@ class _EdgeBlockIndex:
 
 
 def open_store(kind: str, *, g: CSRGraph | None = None,
-               path: str | None = None, **kw) -> GraphStore:
+               path: str | None = None, block_bytes: int | None = None,
+               **kw) -> GraphStore:
     """``mem`` needs ``g``; ``disk`` needs ``path`` (saving ``g`` there
-    first when given)."""
+    first when given, laid out in ``block_bytes`` units; an existing
+    layout keeps its own block size)."""
     if kind == "mem":
         if g is None:
             raise ValueError("mem store needs a graph")
@@ -532,7 +552,7 @@ def open_store(kind: str, *, g: CSRGraph | None = None,
         if path is None:
             raise ValueError("disk store needs a path")
         if g is not None and not os.path.exists(os.path.join(path, MANIFEST)):
-            save_graph(g, path)
+            save_graph(g, path, block_bytes=block_bytes)
         store = DiskStore(path, **kw)
         if g is not None:
             # a pre-existing layout is reused only if it holds this graph

@@ -1,0 +1,328 @@
+"""Declarative data-plane API: PipelineSpec round-trip + golden schema,
+validation of invalid tier/backend combinations, CLI generation, and
+bit-identity of the legacy ``make_loader`` shim against
+``build_pipeline(spec)`` on every backend."""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BackendSpec, CacheTierSpec, GNNConfig, GraphSAGE,
+                        Pipeline, PipelineSpec, PrefetchSpec, SamplerSpec,
+                        StoreSpec, add_pipeline_args, build_pipeline,
+                        build_train_step, make_loader, spec_from_args,
+                        train_loop)
+from repro.optim import adamw
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "golden_pipeline_spec.json")
+FANOUTS = (3, 2)
+BATCH = 8
+
+
+def rich_spec(**kw):
+    base = dict(
+        backend=BackendSpec(name="pallas"),
+        sampler=SamplerSpec(family="khop", fanouts=(10, 5), walk_length=4),
+        store=StoreSpec(kind="disk", path="/data/graphstore",
+                        block_bytes=4096, lock_shards=8),
+        cache_tiers=(
+            CacheTierSpec(tier="host", policy="pinned", capacity_mb=16.0,
+                          pinned_fraction=0.5, arrays=()),
+            CacheTierSpec(tier="device", policy="pinned", rows=4096,
+                          edge_blocks=512, pinned_fraction=0.5,
+                          arrays=("features", "topology"))),
+        prefetch=PrefetchSpec(depth=2),
+        batch_size=64, seed=0, engine="none")
+    base.update(kw)
+    return PipelineSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# serialization: exact round-trip + the golden schema file
+# ---------------------------------------------------------------------------
+
+def test_dict_round_trip_is_exact():
+    spec = rich_spec()
+    assert PipelineSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_json_round_trip_is_exact():
+    spec = rich_spec()
+    assert PipelineSpec.from_json(spec.to_json()) == spec
+
+
+def test_golden_spec_file():
+    """The serialized schema is pinned by a golden file: a field rename or
+    layout change must be a deliberate (reviewed) golden update."""
+    spec = rich_spec()
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    assert json.loads(spec.to_json()) == golden
+    assert PipelineSpec.from_dict(golden) == spec
+
+
+def test_from_dict_rejects_unknown_fields():
+    d = rich_spec().to_dict()
+    d["cache_mb"] = 4.0                       # old flag name, not a field
+    with pytest.raises(ValueError, match="unknown"):
+        PipelineSpec.from_dict(d)
+    d2 = rich_spec().to_dict()
+    d2["sampler"]["fanout"] = 10
+    with pytest.raises(ValueError, match="unknown"):
+        PipelineSpec.from_dict(d2)
+
+
+def test_replace_revalidates():
+    spec = rich_spec()
+    with pytest.raises(ValueError, match="pallas"):
+        spec.replace(backend=BackendSpec(name="host"))
+
+
+# ---------------------------------------------------------------------------
+# validation: invalid combinations fail at construction
+# ---------------------------------------------------------------------------
+
+def test_topology_cache_on_host_backend_rejected():
+    with pytest.raises(ValueError, match="pallas"):
+        PipelineSpec(
+            backend=BackendSpec(name="host"),
+            cache_tiers=(CacheTierSpec(tier="device", edge_blocks=16,
+                                       rows=0, arrays=("topology",)),))
+
+
+def test_feature_cache_on_isp_backend_rejected():
+    with pytest.raises(ValueError, match="pallas"):
+        PipelineSpec(backend=BackendSpec(name="isp"),
+                     cache_tiers=(CacheTierSpec(tier="device", rows=8),))
+
+
+def test_saint_on_device_backends_rejected():
+    for backend in ("isp", "pallas"):
+        with pytest.raises(ValueError, match="saint"):
+            PipelineSpec(backend=BackendSpec(name=backend),
+                         sampler=SamplerSpec(family="saint"))
+
+
+def test_host_tier_requires_disk_store():
+    with pytest.raises(ValueError, match="disk"):
+        PipelineSpec(cache_tiers=(CacheTierSpec(tier="host", arrays=()),))
+
+
+def test_duplicate_tiers_rejected():
+    with pytest.raises(ValueError, match="one cache tier"):
+        PipelineSpec(
+            backend=BackendSpec(name="pallas"),
+            cache_tiers=(CacheTierSpec(tier="device", rows=8),
+                         CacheTierSpec(tier="device", rows=16)))
+
+
+def test_tier_capacity_array_consistency():
+    with pytest.raises(ValueError, match="rows"):
+        CacheTierSpec(tier="device", rows=0, arrays=("features",))
+    with pytest.raises(ValueError, match="edge_blocks"):
+        CacheTierSpec(tier="device", rows=8,
+                      arrays=("features", "topology"))
+    with pytest.raises(ValueError, match="device-tier"):
+        CacheTierSpec(tier="host", rows=8, arrays=())
+
+
+def test_bad_names_rejected():
+    with pytest.raises(ValueError, match="backend.name"):
+        BackendSpec(name="gpu")
+    with pytest.raises(ValueError, match="policy"):
+        CacheTierSpec(tier="device", rows=8, policy="mru")
+    with pytest.raises(ValueError, match="engine"):
+        PipelineSpec(engine="tape")
+    with pytest.raises(ValueError, match="fanouts"):
+        SamplerSpec(fanouts=())
+
+
+def test_effective_fanouts_saint():
+    s = PipelineSpec(sampler=SamplerSpec(family="saint", walk_length=3))
+    assert s.effective_fanouts == (4,)
+    assert rich_spec().effective_fanouts == (10, 5)
+
+
+# ---------------------------------------------------------------------------
+# CLI generation: flags <-> spec
+# ---------------------------------------------------------------------------
+
+def _parse(argv, **add_kw):
+    ap = argparse.ArgumentParser()
+    add_pipeline_args(ap, **add_kw)
+    return ap.parse_args(argv)
+
+
+def test_cli_defaults_build_default_spec():
+    spec = spec_from_args(_parse([]))
+    assert spec == PipelineSpec()
+
+
+def test_cli_flags_parse_into_spec():
+    spec = spec_from_args(_parse([
+        "--backend", "pallas", "--batch", "16", "--seed", "3",
+        "--fanouts", "4,3", "--prefetch", "2", "--graph-store", "disk",
+        "--cache-mb", "2.5", "--cache-policy", "pinned",
+        "--device-cache-rows", "48", "--edge-cache-blocks", "16",
+        "--device-cache-policy", "lru"]))
+    assert spec.backend.name == "pallas"
+    assert spec.batch_size == 16 and spec.seed == 3
+    assert spec.sampler.fanouts == (4, 3)
+    assert spec.prefetch.depth == 2
+    host = spec.host_cache_tier()
+    assert host.capacity_mb == 2.5 and host.policy == "pinned"
+    dev = spec.device_cache_tier()
+    assert dev.rows == 48 and dev.edge_blocks == 16
+    assert dev.arrays == ("features", "topology")
+    assert dev.policy == "lru"
+
+
+def test_cli_spec_file_with_overrides(tmp_path):
+    path = tmp_path / "spec.json"
+    path.write_text(rich_spec(store=StoreSpec(kind="disk")).to_json())
+    # no overrides: the file round-trips through the CLI layer
+    spec = spec_from_args(_parse(["--spec", str(path)]))
+    assert spec == rich_spec(store=StoreSpec(kind="disk"))
+    # an explicit flag overrides just its field
+    spec = spec_from_args(_parse(["--spec", str(path), "--batch", "128",
+                                  "--device-cache-rows", "96"]))
+    assert spec.batch_size == 128
+    assert spec.device_cache_tier().rows == 96
+    assert spec.device_cache_tier().edge_blocks == 512     # kept from file
+
+
+def test_cli_spec_file_explicit_default_still_overrides(tmp_path):
+    """A flag explicitly set to its default value must still override a
+    loaded spec — e.g. turning the file's prefetch/device cache OFF."""
+    path = tmp_path / "spec.json"
+    path.write_text(rich_spec(store=StoreSpec(kind="disk"),
+                              prefetch=PrefetchSpec(depth=2)).to_json())
+    spec = spec_from_args(_parse(["--spec", str(path), "--prefetch", "0",
+                                  "--device-cache-rows", "0"]))
+    assert spec.prefetch.depth == 0
+    dev = spec.device_cache_tier()
+    assert dev.rows == 0 and dev.arrays == ("topology",)   # file's blocks
+
+
+def test_cli_default_overrides_stay_spec_consistent(tmp_path):
+    path = tmp_path / "spec.json"
+    path.write_text(PipelineSpec().to_json())
+    # a launcher-overridden default (train.py's --backend isp) must not
+    # count as an explicit override of a loaded spec
+    args = _parse(["--spec", str(path)], overrides={"backend": "isp"})
+    assert spec_from_args(args).backend.name == "host"
+    args = _parse(["--spec", str(path), "--backend", "pallas"],
+                  overrides={"backend": "isp"})
+    assert spec_from_args(args).backend.name == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# legacy-shim equivalence: make_loader(**kw) == build_pipeline(spec)
+# ---------------------------------------------------------------------------
+
+def _loss_trajectory(loader, g, steps=3):
+    gnn = GraphSAGE(GNNConfig(feat_dim=g.feat_dim, hidden=16,
+                              n_classes=int(g.labels.max()) + 1,
+                              fanouts=tuple(loader.fanouts)))
+    opt = adamw(3e-3)
+    step = build_train_step(loader, gnn, opt)
+    p = gnn.init(jax.random.key(0))
+    state = {"params": p, "opt": opt.init(p),
+             "step": jnp.zeros((), jnp.int32)}
+    losses = []
+    train_loop(loader, step, state, steps=steps,
+               on_step=lambda i, s, m: losses.append(np.asarray(m["loss"])))
+    return losses
+
+
+@pytest.mark.parametrize("backend", ["host", "isp", "pallas"])
+def test_shim_vs_spec_loss_bit_identity(small_graph, host_mesh, backend):
+    """The deprecation shim and the spec entry point must produce
+    bit-identical training at equal seeds."""
+    g = small_graph
+    legacy = make_loader(backend, g, batch_size=BATCH, fanouts=FANOUTS,
+                         mesh=host_mesh, seed=0)
+    spec = PipelineSpec(backend=BackendSpec(name=backend),
+                        sampler=SamplerSpec(fanouts=FANOUTS),
+                        batch_size=BATCH, seed=0)
+    pipe = build_pipeline(spec, g, mesh=host_mesh)
+    assert isinstance(pipe, Pipeline)
+    try:
+        la = _loss_trajectory(legacy, g)
+        lb = _loss_trajectory(pipe, g)
+    finally:
+        legacy.close()
+        pipe.close()
+    np.testing.assert_array_equal(la, lb, err_msg=backend)
+
+
+def test_shim_vs_spec_pallas_feature_cache(small_graph):
+    from repro.storage import DeviceCacheSpec
+    g = small_graph
+    legacy = make_loader("pallas", g, batch_size=BATCH, fanouts=FANOUTS,
+                         seed=0,
+                         device_cache=DeviceCacheSpec(rows=24, policy="lru"))
+    spec = PipelineSpec(
+        backend=BackendSpec(name="pallas"),
+        sampler=SamplerSpec(fanouts=FANOUTS),
+        cache_tiers=(CacheTierSpec(tier="device", rows=24, policy="lru"),),
+        batch_size=BATCH, seed=0)
+    pipe = build_pipeline(spec, g)
+    try:
+        la = _loss_trajectory(legacy, g)
+        lb = _loss_trajectory(pipe, g)
+    finally:
+        legacy.close()
+        pipe.close()
+    np.testing.assert_array_equal(la, lb)
+
+
+def test_build_pipeline_owns_disk_store(small_graph, tmp_path):
+    """A spec-opened store (and its layout directory) belongs to the
+    pipeline: reads go through it, close releases it."""
+    spec = PipelineSpec(
+        backend=BackendSpec(name="host"),
+        sampler=SamplerSpec(fanouts=FANOUTS),
+        store=StoreSpec(kind="disk", path=str(tmp_path / "gs")),
+        cache_tiers=(CacheTierSpec(tier="host", capacity_mb=0.25,
+                                   arrays=()),),
+        batch_size=BATCH, seed=0)
+    pipe = build_pipeline(spec, small_graph)
+    try:
+        mb = pipe.get_batch(0)
+        assert mb.trace.io["block_fetches"] > 0
+        assert pipe.store is not None
+        assert os.path.exists(tmp_path / "gs" / "manifest.json")
+    finally:
+        pipe.close()
+    assert pipe.store._fd == {}                 # closed
+    # user-named directory survives close (only temp dirs are removed)
+    assert os.path.exists(tmp_path / "gs" / "manifest.json")
+
+
+def test_make_loader_unknown_backend_still_keyerror():
+    with pytest.raises(KeyError):
+        make_loader("nonexistent", None)
+
+
+def test_store_materialization_warns(small_graph, tmp_path):
+    """Silent full-graph DRAM materialization is gone: building a device
+    backend from a store without a graph warns loudly."""
+    from repro.storage import DiskStore, save_graph
+    d = str(tmp_path / "gs")
+    save_graph(small_graph, d)
+    st = DiskStore(d, cache_mb=0.25)
+    try:
+        with pytest.warns(UserWarning, match="materializing"):
+            loader = make_loader("pallas", None, batch_size=BATCH,
+                                 fanouts=FANOUTS, store=st)
+        loader.close()
+    finally:
+        st.close()

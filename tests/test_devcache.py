@@ -66,6 +66,23 @@ def test_full_residency_degenerates_to_no_evictions(small_graph):
     assert c2["hits"] == c1["hits"] + g.num_nodes
 
 
+def test_duplicate_ids_install_once(small_graph):
+    """A repeated id in one resolve (the loader's pow2 dispatch padding)
+    must install exactly once.  Double-installing leaves a ghost slot
+    whose later eviction clears slot_of[id] while the id still counts as
+    resident — the next gather of it would silently read cache row 0."""
+    g = small_graph
+    dc = DeviceFeatureCache(g, rows=4, policy="lru")
+    dc.gather_rows(np.array([5, 5]))             # duplicate miss
+    dc.gather_rows(np.array([6, 7]))             # fill remaining capacity
+    # with a ghost, this batch would evict (5-ghost, 6) and corrupt 5
+    out = np.asarray(dc.gather_rows(np.array([5, 8, 9])))
+    np.testing.assert_array_equal(out, g.features[[5, 8, 9]])
+    # and the mirror stayed consistent: one slot per resident id
+    resident = dc._slot_entry[dc._slot_entry >= 0]
+    assert len(set(resident.tolist())) == resident.size
+
+
 def test_capacity_one_thrashes_but_stays_correct(small_graph):
     g = small_graph
     dc = DeviceFeatureCache(g, rows=1, policy="lru")
