@@ -27,7 +27,8 @@ from repro.core.loader import (LOADERS, Minibatch, RunStats, SubgraphLoader,
                                batch_targets, build_train_step, make_loader,
                                register_loader, train_loop)
 from repro.core.partition import PartitionedGraph, partition_graph
-from repro.core.pipeline import (PipelineStats, PrefetchingLoader,
+from repro.core.pipeline import (OverlappedLoader, PipelineStats,
+                                 PrefetchingLoader,
                                  ProducerConsumerPipeline,
                                  make_host_producer)
 from repro.core.sampler import (DEFAULT_FANOUTS, SampleTrace, sample_khop,

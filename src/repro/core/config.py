@@ -116,6 +116,7 @@ class StoreSpec:
     path: str | None = None
     block_bytes: int | None = None      # None = storage-spec default
     lock_shards: int | None = None      # None = storage-spec default
+    io_threads: int | None = None       # None = storage-spec default (1)
 
     def __post_init__(self):
         _check(self.kind, "store.kind", STORE_KINDS)
@@ -123,6 +124,8 @@ class StoreSpec:
             raise ValueError("store.block_bytes must be >= 512")
         if self.lock_shards is not None and self.lock_shards < 1:
             raise ValueError("store.lock_shards must be >= 1")
+        if self.io_threads is not None and self.io_threads < 1:
+            raise ValueError("store.io_threads must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,13 +199,37 @@ class CacheTierSpec:
 
 @dataclasses.dataclass(frozen=True)
 class PrefetchSpec:
-    """Async prefetch queue depth (0 = synchronous; 2 = double buffer)."""
+    """Async prefetch configuration.
+
+    ``depth`` is the bounded output-queue capacity (0 = synchronous;
+    2 = double buffer).  ``overlap=True`` upgrades the single prefetch
+    worker to the multi-stage ``OverlappedLoader``: sampling, cache
+    miss-resolution (plan + backing fetch), and admission/upload run in
+    concurrently draining lanes, each ``stage_depth`` batches deep, so
+    storage latency leaves the consumer's critical path entirely.
+    ``plan_ahead > 0`` additionally runs the frontier planner: the
+    sampling lane warms the host page cache for batch ``t+plan_ahead``'s
+    probable reads while batch ``t`` is in flight.  Bit-identity to the
+    synchronous path holds for every combination (same plans, same
+    order, same bits)."""
 
     depth: int = 0
+    overlap: bool = False
+    stage_depth: int = 2
+    plan_ahead: int = 0
 
     def __post_init__(self):
+        object.__setattr__(self, "overlap", bool(self.overlap))
         if self.depth < 0:
             raise ValueError("prefetch.depth must be >= 0")
+        if self.stage_depth < 1:
+            raise ValueError("prefetch.stage_depth must be >= 1")
+        if self.plan_ahead < 0:
+            raise ValueError("prefetch.plan_ahead must be >= 0")
+        if self.overlap and self.depth < 1:
+            raise ValueError("prefetch.overlap needs depth >= 1 (the "
+                             "overlapped pipeline drains through the "
+                             "prefetch queue)")
 
 
 _COMPONENTS = {
@@ -375,6 +402,9 @@ class Pipeline:
             bits.append(f"engine={s.engine}")
         if s.prefetch.depth:
             bits.append(f"prefetch={s.prefetch.depth}")
+        if s.prefetch.overlap:
+            bits.append(f"overlap(stages={s.prefetch.stage_depth}, "
+                        f"plan_ahead={s.prefetch.plan_ahead})")
         host = s.host_cache_tier()
         if host is not None:
             bits.append(f"host-cache={host.capacity_mb or 'default'}MB"
@@ -463,6 +493,8 @@ def build_pipeline(spec: PipelineSpec, graph_or_store=None, *, g=None,
             store_kw = {}
             if spec.store.lock_shards is not None:
                 store_kw["lock_shards"] = spec.store.lock_shards
+            if spec.store.io_threads is not None:
+                store_kw["io_threads"] = spec.store.io_threads
             store = open_store("disk", g=g, path=path,
                                block_bytes=spec.store.block_bytes,
                                cache_mb=None if host is None
@@ -524,6 +556,20 @@ FLAG_TABLE = {
         type=int,
         help="async prefetch queue depth (0 = synchronous; 2 = double "
              "buffering): overlap data preparation with training")),
+    "--overlap": ("prefetch.overlap", dict(
+        type=int, choices=(0, 1), metavar="0|1",
+        help="1 = multi-stage overlapped out-of-core pipeline "
+             "(sample / miss-resolve / admit+upload lanes draining "
+             "concurrently; needs --prefetch >= 1)")),
+    "--stage-depth": ("prefetch.stage_depth", dict(
+        type=int,
+        help="overlapped pipeline: per-stage queue depth (how many "
+             "batches each lane may run ahead of the next)")),
+    "--plan-ahead": ("prefetch.plan_ahead", dict(
+        type=int,
+        help="overlapped pipeline: frontier-planner window — warm the "
+             "host page cache for batch t+N's probable reads while "
+             "batch t is in flight (0 = off)")),
     "--storage-engine": ("engine", dict(
         choices=ENGINES,
         help="simulated storage tier attached to the loader")),
@@ -539,6 +585,11 @@ FLAG_TABLE = {
         type=int,
         help="disk-store page-cache lock shards (default: storage spec; "
              "1 = single global lock)")),
+    "--io-threads": ("store.io_threads", dict(
+        type=int,
+        help="disk-store pread pool size: concurrent block fetches per "
+             "multi-range gather (default: storage spec, 1 = serial "
+             "reads; keep <= --lock-shards)")),
     "--cache-mb": ("cache.capacity_mb", dict(
         type=float,
         help="host tier: disk-store page-cache budget in MB (default: "

@@ -50,6 +50,7 @@ shapes are guaranteed to match it.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import threading
@@ -215,8 +216,14 @@ def _build_loader(spec: PipelineSpec, *, g: CSRGraph | None, store=None,
                            walk_length=spec.sampler.walk_length,
                            storage_engine=storage_engine, store=store, **kw)
     if spec.prefetch.depth:
-        from repro.core.pipeline import PrefetchingLoader
-        loader = PrefetchingLoader(loader, depth=spec.prefetch.depth)
+        if spec.prefetch.overlap:
+            from repro.core.pipeline import OverlappedLoader
+            loader = OverlappedLoader(loader, depth=spec.prefetch.depth,
+                                      stage_depth=spec.prefetch.stage_depth,
+                                      plan_ahead=spec.prefetch.plan_ahead)
+        else:
+            from repro.core.pipeline import PrefetchingLoader
+            loader = PrefetchingLoader(loader, depth=spec.prefetch.depth)
     return loader
 
 
@@ -559,44 +566,105 @@ class PallasSubgraphLoader(_LoaderBase):
             self._sample = None
 
     def get_batch(self, idx: int) -> Minibatch:
-        targets = self.targets(idx)
-        self.impose_storage_cost(idx)
-        key = self._jax.random.fold_in(self._key, idx)
         if self.devcache is None and self.edgecache is None:
+            targets = self.targets(idx)
+            self.impose_storage_cost(idx)
+            key = self._jax.random.fold_in(self._key, idx)
             hops, hop_feats, labels = self._prepare(
                 self.indptr, self.indices, self.features, self.labels,
                 self._jnp.asarray(targets), key)
             return Minibatch(targets=targets, hop_ids=list(hops),
                              hop_feats=list(hop_feats), labels=labels)
-        return self._get_batch_cached(targets, key)
+        # the cached data plane is the staged composition — the same
+        # three functions the OverlappedLoader runs on separate lanes,
+        # executed back-to-back here, so sync and overlapped training are
+        # bit-identical by construction
+        return self._stage_admit(self._stage_resolve(self._stage_sample(idx)))
 
-    def _get_batch_cached(self, targets, key) -> Minibatch:
-        """The cached data plane: sample (through the edge-block cache
-        when configured, else the device-resident edge array), then
-        gather features (through the row cache when configured, else the
-        device-resident table).  The RNG streams are untouched and both
-        caches return the exact bits the full uploads would — bit-identity
-        holds for every cache combination."""
-        jnp, np_ = self._jnp, np
-        io0 = _io_snapshot(self.store)
-        cache0 = {name: c.counters() for name, c in
-                  (("devcache", self.devcache), ("edgecache", self.edgecache))
-                  if c is not None}
-        if self.edgecache is not None:
-            hops, labels = self._sample_khop_edgecached(targets, key)
-        else:
-            hops, labels = self._sample(self.indptr, self.indices,
-                                        self.labels, jnp.asarray(targets),
-                                        key)
-        hop_ids = [np_.asarray(h) for h in hops]
+    # -- the staged cached data plane ----------------------------------------
+    # Stage contract (pipeline.OverlappedLoader): stage 0 maps a batch
+    # index to a payload, later stages map the payload forward; each stage
+    # is called strictly in batch order within its lane.  Cache-mirror
+    # bookkeeping happens only in plan_rows (resolve lane, serial) and
+    # device mutations replay in plan order (admit lane, serial), so
+    # results are bit-identical to running the three stages inline.
+
+    def pipeline_stages(self):
+        """The overlapped decomposition of the cached path: sample the
+        k-hop (edge-block cache traffic included), resolve feature-cache
+        misses (storage preads), admit + gather on device.  ``None`` for
+        the full-upload configuration — there is nothing to overlap."""
+        if self.devcache is None and self.edgecache is None:
+            return None
+        return [("sample", self._stage_sample),
+                ("resolve", self._stage_resolve),
+                ("admit", self._stage_admit)]
+
+    def _attr(self, ctx):
+        """Attribution scope for batch-owned store reads: bill ``ctx``
+        even when the store fans the read out to its pread pool."""
+        if ctx is None:
+            return contextlib.nullcontext()
+        return self.store.io_attribution(ctx)
+
+    def _stage_sample(self, idx: int) -> dict:
+        """Sample the k-hop (through the edge-block cache when configured,
+        else the device-resident edge array).  The RNG streams are
+        untouched and the staged block contents are exact — bit-identity
+        holds for every cache combination.  The edge-block cache is owned
+        entirely by this lane (plan+resolve+dispatch per hop), so its
+        counters delta here is the batch's exact edge traffic."""
+        targets = self.targets(idx)
+        self.impose_storage_cost(idx)
+        key = self._jax.random.fold_in(self._key, idx)
+        make_ctx = getattr(self.store, "make_io_context", None)
+        ctx = make_ctx() if make_ctx is not None else None
+        io0 = _io_snapshot(self.store) if ctx is None else None
+        edge0 = (self.edgecache.counters()
+                 if self.edgecache is not None else None)
+        with self._attr(ctx):
+            if self.edgecache is not None:
+                hops, labels = self._sample_khop_edgecached(targets, key)
+            else:
+                hops, labels = self._sample(self.indptr, self.indices,
+                                            self.labels,
+                                            self._jnp.asarray(targets), key)
+        edge_io = None
+        if edge0 is not None:
+            e1 = self.edgecache.counters()
+            edge_io = {k: e1[k] - edge0[k] for k in e1}
+        return dict(targets=targets, hops=hops, labels=labels,
+                    ctx=ctx, io0=io0, edge_io=edge_io)
+
+    def _stage_resolve(self, s: dict) -> dict:
+        """Plan + fetch the batch's feature-cache misses.  The plan is
+        made serially in batch order under the cache lock (reserving
+        slots and mirror state — the reserved-slot handoff), then the
+        miss rows are pread from storage with no lock held; the store may
+        split the reads across its pool, billed to this batch's ctx."""
+        np_ = np
+        hop_ids = [np_.asarray(h) for h in s["hops"]]
         uniq = np_.unique(np_.concatenate([h.reshape(-1) for h in hop_ids]))
+        s["hop_ids"], s["uniq"] = hop_ids, uniq
         if self.devcache is not None:
             # dispatch-pad the unique set to a power of two (repeating the
             # last id, so pads are cache hits): U varies every batch, and
             # an unbucketed width would recompile the downstream take per
             # batch
-            rows = self.devcache.gather_rows(self._pad_pow2(uniq, uniq[-1]),
-                                             n_valid=uniq.size)
+            with self._attr(s["ctx"]):
+                plan = self.devcache.plan_rows(
+                    self._pad_pow2(uniq, uniq[-1]), n_valid=uniq.size)
+                self.devcache.fetch_plan(plan)
+            s["plan"] = plan
+        return s
+
+    def _stage_admit(self, s: dict) -> Minibatch:
+        """Install the fetched rows (H2D upload), gather on device, and
+        assemble the Minibatch with the batch's exact io attribution."""
+        jnp, np_ = self._jnp, np
+        hop_ids, uniq = s["hop_ids"], s["uniq"]
+        if self.devcache is not None:
+            rows = self.devcache.execute_plan(s["plan"])
             F = self.devcache.feat_dim
             hop_feats = []
             for h in hop_ids:
@@ -605,15 +673,32 @@ class PallasSubgraphLoader(_LoaderBase):
                                           axis=0).reshape(h.shape + (F,)))
         else:
             hop_feats = [self._ops.feature_gather_rows(self.features, h)
-                         for h in hops]
-        io = _io_delta(self.store, io0) or {}
-        for name, c0 in cache0.items():
-            c1 = getattr(self, name).counters()
-            io[name] = {k: c1[k] - c0[k] for k in c1}
+                         for h in s["hops"]]
+        if s["ctx"] is not None:
+            io = s["ctx"].counters()
+        else:
+            io = _io_delta(self.store, s["io0"]) or {}
+        if self.devcache is not None:
+            io["devcache"] = dict(s["plan"].counters)
+        if s["edge_io"] is not None:
+            io["edgecache"] = s["edge_io"]
         trace = SampleTrace(touched_nodes=np_.empty(0, np_.int64),
                             hops=hop_ids, subgraph_nodes=uniq, io=io)
-        return Minibatch(targets=targets, hop_ids=list(hops),
-                         hop_feats=hop_feats, labels=labels, trace=trace)
+        return Minibatch(targets=s["targets"], hop_ids=list(s["hops"]),
+                         hop_feats=hop_feats, labels=s["labels"],
+                         trace=trace)
+
+    def warm_batch(self, idx: int) -> int:
+        """Frontier planner hook: pre-pull batch ``idx``'s probable byte
+        ranges (its targets' neighbor lists and feature rows) through the
+        store's page cache on the pread pool.  Advisory — warms only the
+        host page cache, never device or cache-mirror state."""
+        warm = getattr(self.store, "warm_nodes", None)
+        if warm is None:
+            return 0
+        return warm(self.targets(idx),
+                    features=self.devcache is not None,
+                    edges=self.edgecache is not None)
 
     def _sample_khop_edgecached(self, targets, key):
         """K-hop sampling through the HBM edge-block cache.

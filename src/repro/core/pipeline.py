@@ -205,6 +205,212 @@ class PrefetchingLoader:
         self.inner.close()
 
 
+class OverlappedLoader:
+    """Multi-stage overlapped out-of-core pipeline (the SmartSAGE-style
+    lane separation: compute, cache maintenance, and I/O draining
+    concurrently).
+
+    Wraps a ``SubgraphLoader`` that exposes ``pipeline_stages()`` — an
+    ordered list of ``(name, fn)`` stages where stage 0 maps a batch
+    index to a payload and each later stage maps the previous payload
+    forward (the pallas out-of-core loader splits into sample ->
+    resolve -> admit).  Each stage runs on its own thread with a bounded
+    queue of ``stage_depth`` between stages and ``depth`` at the output,
+    so while the consumer trains on batch t, the admit lane uploads
+    batch t+1's misses, the resolve lane preads batch t+2's misses from
+    storage, and the sample lane draws batch t+3 — storage latency
+    leaves the critical path entirely.  Loaders without
+    ``pipeline_stages()`` degrade to a single produce stage (exactly a
+    ``PrefetchingLoader``).
+
+    Bit-identity: every lane processes batches strictly in index order,
+    cache *plans* are made serially in batch order (stage contract), and
+    device mutations replay in plan order on the admit lane — so values,
+    counters, and loss trajectories match the synchronous path exactly
+    (asserted in tests/test_overlap.py).
+
+    ``plan_ahead > 0`` runs the frontier planner in the sample lane:
+    before drawing batch t, it calls ``inner.warm_batch(i)`` for every
+    unwarmed index up to ``t + plan_ahead``, pre-pulling the batch's
+    probable byte ranges (its targets' neighbor lists + feature rows —
+    known ahead of time because batches are pure functions of the
+    index) through the store's page cache on the pread pool.  Warms are
+    advisory: they only populate the host page cache, never device or
+    cache-mirror state, so they cannot perturb bit-identity."""
+
+    def __init__(self, inner, *, depth: int = 2, stage_depth: int = 2,
+                 plan_ahead: int = 0):
+        self.inner = inner
+        self.backend = getattr(inner, "backend", "?")
+        self.fanouts = tuple(inner.fanouts)
+        self.depth = max(1, int(depth))
+        self.stage_depth = max(1, int(stage_depth))
+        self.plan_ahead = max(0, int(plan_ahead))
+        get_stages = getattr(inner, "pipeline_stages", None)
+        stages = get_stages() if get_stages is not None else None
+        if not stages:
+            stages = [("produce", inner.get_batch)]
+        self._stages = list(stages)
+        self.stage_names = [name for name, _ in self._stages]
+        self._warm = getattr(inner, "warm_batch", None)
+        self._stage_s = {name: 0.0 for name in self.stage_names}
+        self._stage_n = {name: 0 for name in self.stage_names}
+        self._queues: list[queue.Queue] = []
+        self._threads: list[threading.Thread] = []
+        self._stop = threading.Event()
+        self._expect: int | None = None
+        self._prefetched = 0
+        self._restarts = 0
+        self._warmed = 0
+        self._t_started: float | None = None
+        self._t_stopped: float | None = None
+
+    # -- lanes ---------------------------------------------------------------
+    def _put(self, q: queue.Queue, item, stop: threading.Event) -> bool:
+        while not stop.is_set():                # backpressure, abortable
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _source(self, start: int, qout: queue.Queue, stop: threading.Event):
+        """Stage-0 lane: batch index -> first payload, plus the planner
+        (page-cache warming for the plan-ahead window)."""
+        name, fn = self._stages[0]
+        idx = start
+        warmed_to = start                       # warm [start, idx+1+W)
+        while not stop.is_set():
+            if self._warm is not None and self.plan_ahead:
+                while warmed_to < idx + 1 + self.plan_ahead:
+                    try:
+                        self._warmed += self._warm(warmed_to)
+                    except Exception:           # advisory: never kill a lane
+                        pass
+                    warmed_to += 1
+            t0 = time.perf_counter()
+            try:
+                item = (idx, fn(idx), None)
+            except BaseException as e:          # surfaced on the consumer
+                item = (idx, None, e)
+            self._stage_s[name] += time.perf_counter() - t0
+            self._stage_n[name] += 1
+            if not self._put(qout, item, stop) or item[2] is not None:
+                return
+            idx += 1
+
+    def _lane(self, k: int, qin: queue.Queue, qout: queue.Queue,
+              stop: threading.Event):
+        """Stage-k lane (k >= 1): previous payload -> next payload."""
+        name, fn = self._stages[k]
+        while not stop.is_set():
+            try:
+                idx, payload, err = qin.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if err is None:
+                t0 = time.perf_counter()
+                try:
+                    payload = fn(payload)
+                except BaseException as e:
+                    payload, err = None, e
+                self._stage_s[name] += time.perf_counter() - t0
+                self._stage_n[name] += 1
+            if not self._put(qout, (idx, payload, err), stop) \
+                    or err is not None:
+                return
+
+    def _restart(self, start: int):
+        if self._threads:
+            self._stop.set()
+            for t in self._threads:
+                t.join(timeout=5.0)
+            self._restarts += 1
+        # fresh queues per generation: a lane that outlives a restart
+        # (join timeout mid-production) drains into its own dead queues
+        # instead of corrupting the replacement's ordering
+        n = len(self._stages)
+        self._queues = [queue.Queue(maxsize=self.stage_depth)
+                        for _ in range(n - 1)]
+        self._queues.append(queue.Queue(maxsize=self.depth))
+        self._stop = threading.Event()
+        self._threads = [threading.Thread(
+            target=self._source, args=(start, self._queues[0], self._stop),
+            daemon=True, name="overlap-" + self.stage_names[0])]
+        for k in range(1, n):
+            self._threads.append(threading.Thread(
+                target=self._lane,
+                args=(k, self._queues[k - 1], self._queues[k], self._stop),
+                daemon=True, name="overlap-" + self.stage_names[k]))
+        for t in self._threads:
+            t.start()
+        self._expect = start
+        if self._t_started is None:
+            self._t_started = time.perf_counter()
+
+    # -- consumer side -------------------------------------------------------
+    def get_batch(self, idx: int, timeout: float = 60.0):
+        if not self._threads or idx != self._expect:
+            self._restart(idx)
+        t0 = time.perf_counter()
+        out = self._queues[-1]
+        while True:
+            try:
+                got, batch, err = out.get(timeout=0.05)
+                break
+            except queue.Empty:
+                if time.perf_counter() - t0 > timeout:
+                    raise TimeoutError(f"batch {idx} not produced by the "
+                                       "overlapped pipeline")
+        if err is not None:
+            self._expect = None                 # force a clean restart
+            raise err
+        assert got == idx, f"overlap order violated: {got} != {idx}"
+        self._expect = idx + 1
+        self._prefetched += 1
+        return batch
+
+    def start_epoch(self) -> None:
+        """Forward the epoch boundary (same pipeline-depth caveat as
+        ``PrefetchingLoader.start_epoch``)."""
+        mark = getattr(self.inner, "start_epoch", None)
+        if mark is not None:
+            mark()
+
+    def stats(self) -> dict:
+        wall = 0.0
+        if self._t_started is not None:
+            end = self._t_stopped if self._t_stopped is not None \
+                else time.perf_counter()
+            wall = end - self._t_started
+        stage_s = dict(self._stage_s)
+        busy = sum(stage_s.values())
+        return dict(self.inner.stats(),
+                    prefetch_depth=self.depth,
+                    stage_depth=self.stage_depth,
+                    plan_ahead=self.plan_ahead,
+                    prefetched=self._prefetched,
+                    prefetch_restarts=self._restarts,
+                    stages=list(self.stage_names),
+                    stage_s=stage_s,
+                    stage_mean_s={k: v / max(self._stage_n[k], 1)
+                                  for k, v in stage_s.items()},
+                    planner_warm_ranges=self._warmed,
+                    pipeline_wall_s=wall,
+                    # > 1.0 iff the lanes actually ran concurrently
+                    overlap_factor=(busy / wall if wall > 0 else 0.0))
+
+    def close(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads = []
+        if self._t_started is not None and self._t_stopped is None:
+            self._t_stopped = time.perf_counter()
+        self.inner.close()
+
+
 class ProducerConsumerPipeline:
     """Bounded-queue pipeline: n_workers producer threads + caller-driven
     consumer.  ``produce_fn(batch_idx) -> batch``; consumption order is

@@ -37,10 +37,19 @@ of its entries is resident — even when the batch's working set exceeds
 the whole cache.  Bit-identity: entries cross host->device with
 unchanged bits and the scatter/gather paths copy them verbatim, so
 cached training matches the full-upload path exactly at equal seeds.
+
+Admission is *staged* (``plan_rows`` -> ``fetch_plan`` ->
+``execute_plan``): planning is serialized mirror bookkeeping that
+reserves victim slots, fetching is lock-free backing I/O callable from
+any thread, and execution replays installs+gathers in plan order on a
+single lane — the decomposition the overlapped loader
+(``core.pipeline.OverlappedLoader``) spreads across its miss-resolve
+and admit lanes while staying bit-identical to the synchronous path.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import threading
 
@@ -65,6 +74,44 @@ def pad_pow2(arr: np.ndarray, fill) -> np.ndarray:
 # the kernels own the edge-array pad rule; re-exported here because the
 # block cache's public surface is the storage package
 from repro.kernels.neighbor_sample import edge_block_count  # noqa: E402
+
+
+@dataclasses.dataclass
+class _PlanSegment:
+    """One residency-contract segment of an ``AdmissionPlan``: which ids
+    it serves, which of them miss, the victim slots reserved for the
+    installs, and (after the fetch stage) the fetched payloads."""
+
+    ids: np.ndarray                     # segment ids (dispatch pads incl.)
+    miss_ids: np.ndarray
+    slots: np.ndarray                   # install slots for miss_ids
+    evict_ids: np.ndarray
+    rows: np.ndarray | None = None      # miss payloads, set by the fetch
+    hits: int = 0                       # counted-request counters
+    misses: int = 0
+    evictions: int = 0
+
+
+@dataclasses.dataclass
+class AdmissionPlan:
+    """A batch's cache admission, decided but not yet performed.
+
+    Produced by ``plan_rows`` (serialized host-mirror bookkeeping),
+    fed through ``fetch_plan`` (backing-store reads, lock-free, any
+    thread), consumed by ``execute_plan``/``install_plan`` (ordered
+    device mutation).  ``counters`` is this plan's exact counted
+    hit/miss/eviction/upload bill — attributed per plan rather than by
+    global deltas, so concurrent stages of different batches never
+    bleed into each other's accounting.
+
+    Reserved-slot handoff: planning stamps every planned id at the MRU
+    end of the mirror and assigns victim slots immediately, so a later
+    batch's plan can only evict what this plan no longer needs; because
+    installs+gathers replay strictly in plan order on a single lane,
+    an in-flight batch's rows are never evicted before its gather."""
+
+    segments: list
+    counters: dict
 
 
 class DeviceArrayCache:
@@ -179,12 +226,17 @@ class DeviceArrayCache:
             return
         yield from np.split(ids, cuts)
 
-    def _resolve(self, seg: np.ndarray, counted: int | None = None) -> None:
-        """Make every id in ``seg`` resident, in one batched pass: stamp
-        hits at the MRU end, pick victim slots for all misses at once
-        (free slots first, then the oldest-stamped non-pinned slots),
-        batch-fetch the missed entries from the backing store, and push
-        one scatter update to the device.
+    def _plan_segment(self, seg: np.ndarray,
+                      counted: int | None = None) -> _PlanSegment:
+        """Decide residency for every id in ``seg``, in one batched pass
+        of host-mirror bookkeeping: stamp hits at the MRU end, pick
+        victim slots for all misses at once (free slots first, then the
+        oldest-stamped non-pinned slots), and record the miss ids +
+        reserved slots in the returned ``_PlanSegment`` — the fetch and
+        the device scatter happen later (``_fetch_segment`` /
+        ``_install_segment``), possibly on other threads/lanes.  The
+        mirror is updated *here*, so consecutive plans compose exactly
+        like consecutive synchronous resolves.  Caller holds the lock.
 
         Only the first ``counted`` ids contribute to the hit/miss/
         eviction counters (default: all) — positions beyond that are
@@ -209,13 +261,18 @@ class DeviceArrayCache:
         dup[order[1:]] = seg[order][1:] == seg[order][:-1]
         miss_mask = ~hit_mask & ~dup
         miss_ids = seg[miss_mask]
-        self.hits += int(np.count_nonzero((hit_mask | (~hit_mask & dup))
-                                          [:counted]))
+        n_hit = int(np.count_nonzero((hit_mask | (~hit_mask & dup))
+                                     [:counted]))
         n_miss_counted = int(np.count_nonzero(miss_mask[:counted]))
+        self.hits += n_hit
         self.misses += n_miss_counted
+        ps = _PlanSegment(ids=seg, miss_ids=miss_ids,
+                          slots=np.empty(0, np.int64),
+                          evict_ids=np.empty(0, np.int64),
+                          hits=n_hit, misses=n_miss_counted)
         m = int(miss_ids.size)
         if m == 0:
-            return
+            return ps
 
         n_free = self.capacity - self._free_ptr
         take = min(n_free, m)
@@ -231,18 +288,41 @@ class DeviceArrayCache:
             self._host_slot[victims] = -1
             self._slot_entry[oldest] = -1
             new_slots = np.concatenate([new_slots, oldest])
-            evict_ids = victims
+            ps.evict_ids = victims
             # counted misses consume free slots first (they are a prefix
             # of the segment), so only their overflow displaces entries
-            self.evictions += min(n_evict, max(0, n_miss_counted - n_free))
-        else:
-            evict_ids = np.empty(0, np.int64)
+            ps.evictions = min(n_evict, max(0, n_miss_counted - n_free))
+            self.evictions += ps.evictions
         self._slot_stamp[new_slots] = self._clock + np.arange(m)
         self._clock += m
         self._host_slot[miss_ids] = new_slots
         self._slot_entry[new_slots] = miss_ids
-        rows = np.ascontiguousarray(self._fetch(miss_ids))
-        self._push(miss_ids, new_slots, evict_ids, rows)
+        ps.slots = new_slots
+        return ps
+
+    def _fetch_segment(self, ps: _PlanSegment) -> None:
+        """Pull a planned segment's miss payloads from the backing store.
+        Touches no cache state (host mirror or device), so it is safe on
+        any thread, concurrently with planning and installs — this is
+        the piece the overlapped loader runs in its resolve lane."""
+        if ps.miss_ids.size:
+            ps.rows = np.ascontiguousarray(self._fetch(ps.miss_ids))
+
+    def _install_segment(self, ps: _PlanSegment) -> None:
+        """Scatter a fetched segment into its reserved slots.  Device
+        mutations must replay in plan order (single lane) — that is what
+        keeps the device ``slot_of``/``table`` tracking the host mirror
+        and makes the staged path bit-identical to the synchronous one."""
+        if ps.miss_ids.size:
+            self._push(ps.miss_ids, ps.slots, ps.evict_ids, ps.rows)
+            ps.rows = None              # free the host copy
+
+    def _resolve(self, seg: np.ndarray, counted: int | None = None) -> None:
+        """Make every id in ``seg`` resident, synchronously: plan, fetch,
+        install in one call (the unstaged path)."""
+        ps = self._plan_segment(seg, counted)
+        self._fetch_segment(ps)
+        self._install_segment(ps)
 
     def _push(self, miss_ids, miss_slots, evict_ids, rows) -> None:
         """One jitted scatter installs the fetched entries and repairs the
@@ -263,11 +343,58 @@ class DeviceArrayCache:
             jnp.asarray(ev), jnp.asarray(new_ids))
         self.bytes_uploaded += int(m) * self.width * self._itemsize
 
+    # -- staged admission (the overlapped pipeline's three lanes) ------------
+    def plan_rows(self, ids: np.ndarray,
+                  n_valid: int | None = None) -> AdmissionPlan:
+        """Stage one of admission: serialized host-mirror bookkeeping for
+        ``ids`` (segmented by the residency contract), under the lock,
+        with nothing fetched or uploaded yet.  Plans MUST be created in
+        batch order and executed in the same order — the plan records
+        reserved victim slots against the mirror state at plan time.
+        ``n_valid`` marks trailing ids as dispatch padding (excluded
+        from the counters, like ``gather_rows``)."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        nv = ids.size if n_valid is None else int(n_valid)
+        plan = AdmissionPlan(segments=[], counters={
+            "hits": 0, "misses": 0, "evictions": 0, "preload_rows": 0,
+            "bytes_uploaded": 0})
+        offset = 0
+        with self._lock:
+            for seg in self._segments(ids):
+                if seg.size == 0:
+                    continue
+                ps = self._plan_segment(seg, counted=max(
+                    0, min(seg.size, nv - offset)))
+                offset += seg.size
+                plan.segments.append(ps)
+                plan.counters["hits"] += ps.hits
+                plan.counters["misses"] += ps.misses
+                plan.counters["evictions"] += ps.evictions
+                plan.counters["bytes_uploaded"] += (
+                    int(ps.miss_ids.size) * self.width * self._itemsize)
+        return plan
+
+    def fetch_plan(self, plan: AdmissionPlan) -> AdmissionPlan:
+        """Stage two: pull every planned segment's miss payloads from the
+        backing store.  Lock-free and device-free — safe on any thread,
+        overlapping other batches' planning, installs, and compute."""
+        for ps in plan.segments:
+            self._fetch_segment(ps)
+        return plan
+
+    def install_plan(self, plan: AdmissionPlan) -> None:
+        """Stage three: scatter the fetched segments into their reserved
+        slots, strictly in plan order, from a single lane."""
+        for ps in plan.segments:
+            self._install_segment(ps)
+
     # -- read paths ----------------------------------------------------------
     def resolve(self, ids: np.ndarray) -> None:
         """Admission without a gather: make ``ids`` resident (segmented by
         the residency contract).  The sampling kernel reads the entries
-        through ``table``/``slot_of`` itself."""
+        through ``table``/``slot_of`` itself.  Unstaged — the edge-block
+        cache is owned entirely by the sampling lane, which resolves and
+        dispatches within one thread."""
         ids = np.asarray(ids, np.int64).reshape(-1)
         with self._lock:
             for seg in self._segments(ids):
@@ -323,6 +450,28 @@ class DeviceFeatureCache(DeviceArrayCache):
             pinned_fraction=(spec.pinned_fraction if pinned_fraction is None
                              else pinned_fraction))
 
+    def execute_plan(self, plan: AdmissionPlan):
+        """Admit-and-gather lane: install each fetched segment and gather
+        it on device, strictly in plan order.  Interleaving install(k) ->
+        gather(k) -> install(k+1) replays exactly the synchronous
+        ``gather_rows`` sequence (a later segment's installs may evict an
+        earlier segment's rows, but only after that segment's gather),
+        so values, counters, and eviction outcomes are bit-identical."""
+        jnp = self._jnp
+        parts = []
+        for ps in plan.segments:
+            self._install_segment(ps)
+            # pad the dispatch length with a resident id so the
+            # kernel's compiled-shape count stays logarithmic
+            n = ps.ids.size
+            seg = pad_pow2(ps.ids, ps.ids[-1])
+            parts.append(self._ops.feature_gather_cached(
+                self.table, self.slot_of,
+                jnp.asarray(seg, jnp.int32))[:n])
+        if not parts:
+            return jnp.zeros((0, self.feat_dim), jnp.float32)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
     def gather_rows(self, ids: np.ndarray, n_valid: int | None = None):
         """ids: (U,) host node ids -> (U, F) float32 device array, gathered
         on-device through the cache; misses are admitted along the way.
@@ -330,29 +479,18 @@ class DeviceFeatureCache(DeviceArrayCache):
 
         ``n_valid`` marks trailing ids as dispatch padding (the loader's
         pow2 bucketing): they are resolved and gathered like any other
-        id but excluded from the hit/miss/eviction counters."""
-        jnp = self._jnp
+        id but excluded from the hit/miss/eviction counters.
+
+        This is the synchronous composition of the staged API — plan
+        (mirror bookkeeping) -> fetch (backing reads) -> execute (install
+        + device gather); the overlapped loader runs the same three
+        calls from separate pipeline lanes."""
         ids = np.asarray(ids, np.int64).reshape(-1)
         if ids.size == 0:
-            return jnp.zeros((0, self.feat_dim), jnp.float32)
-        nv = ids.size if n_valid is None else int(n_valid)
-        offset = 0
-        parts = []
-        with self._lock:
-            for seg in self._segments(ids):
-                if seg.size == 0:
-                    continue
-                self._resolve(seg, counted=max(0, min(seg.size,
-                                                      nv - offset)))
-                offset += seg.size
-                # pad the dispatch length with a resident id so the
-                # kernel's compiled-shape count stays logarithmic
-                n = seg.size
-                seg = pad_pow2(seg, seg[-1])
-                parts.append(self._ops.feature_gather_cached(
-                    self.table, self.slot_of,
-                    jnp.asarray(seg, jnp.int32))[:n])
-        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+            return self._jnp.zeros((0, self.feat_dim), self._jnp.float32)
+        plan = self.plan_rows(ids, n_valid=n_valid)
+        self.fetch_plan(plan)
+        return self.execute_plan(plan)
 
 
 class DeviceEdgeBlockCache(DeviceArrayCache):

@@ -85,11 +85,15 @@ class DiskStoreSpec:
     style recency, 'pinned' = §IV-C hot-block pinning + LRU spill).  The
     page cache is split into ``lock_shards`` hashed-block shards so
     concurrent producer workers don't serialize on one lock (the engines'
-    shared-resource contention model, Fig. 17)."""
+    shared-resource contention model, Fig. 17).  ``io_threads`` sizes the
+    store's pread pool: gathers split their block-disjoint byte ranges
+    across that many concurrent ``pread`` calls (1 = fully synchronous
+    reads, the bit-compatible default)."""
     block_bytes: int = 4096
     cache_mb: float = 16.0
     policy: str = "lru"
     lock_shards: int = 8
+    io_threads: int = 1
 
 
 @dataclasses.dataclass(frozen=True)

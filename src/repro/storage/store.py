@@ -31,9 +31,12 @@ the store classes add the IO-counter/stats half.
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import threading
+import warnings
+from concurrent.futures import ThreadPoolExecutor
 from typing import Protocol, runtime_checkable
 
 import numpy as np
@@ -146,6 +149,39 @@ class InMemoryStore:
         pass
 
 
+class IOContext:
+    """One attribution scope for a ``DiskStore``'s I/O counters — typically
+    one minibatch.  Reads performed while the context is installed
+    (``DiskStore.io_attribution``) merge into it, *including* reads the
+    store's pread pool runs on other threads on the installer's behalf,
+    so ``counters()`` is the exact I/O bill of the scope no matter which
+    threads served it.  Thread-safe: pool workers add concurrently."""
+
+    KEYS = ("requests", "block_fetches", "bytes_fetched", "hits",
+            "misses", "evictions")
+
+    __slots__ = ("_lock", "_c")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._c = dict.fromkeys(self.KEYS, 0)
+
+    def add(self, *, requests=0, block_fetches=0, bytes_fetched=0,
+            hits=0, misses=0, evictions=0) -> None:
+        with self._lock:
+            c = self._c
+            c["requests"] += requests
+            c["block_fetches"] += block_fetches
+            c["bytes_fetched"] += bytes_fetched
+            c["hits"] += hits
+            c["misses"] += misses
+            c["evictions"] += evictions
+
+    def counters(self) -> dict:
+        with self._lock:
+            return dict(self._c)
+
+
 def _pad_to_block(f, block_bytes: int) -> int:
     """Zero-pad an open binary file to the next block boundary."""
     size = f.tell()
@@ -217,6 +253,16 @@ class DiskStore:
     engines' shared-resource contention model, Fig. 17; the
     ``--contention-workers`` micro-benchmark measures the scaling).  The
     pinned set is immutable after the preload and served lock-free.
+
+    ``io_threads > 1`` additionally opens a pread pool: multi-range
+    gathers (``gather_features`` / ``gather_edges`` /
+    ``gather_edge_blocks``) split their ranges into block-disjoint
+    groups and read the groups concurrently — no disk block is shared
+    across groups, so each block is fetched by exactly one task and the
+    fetch counters stay exact.  Attribution follows the *submitter*: a
+    pool read bills the ``IOContext`` installed on the thread that
+    triggered it (``io_attribution``), which is what makes per-batch
+    ``SampleTrace.io`` deltas exact under concurrent producers.
     """
 
     kind = "disk"
@@ -224,6 +270,7 @@ class DiskStore:
     def __init__(self, path: str, *, cache_mb: float | None = None,
                  policy: str | None = None, cache_blocks: int | None = None,
                  lock_shards: int | None = None,
+                 io_threads: int | None = None,
                  spec: SystemSpec = DEFAULT):
         self.path = path
         with open(os.path.join(path, MANIFEST)) as f:
@@ -280,6 +327,22 @@ class DiskStore:
         self._shards = [LRUCache(max(1, c)) for c in per]
         self._locks = [threading.Lock() for _ in range(shards)]
         self.lock_shards = shards
+        io_threads = (spec.diskstore.io_threads if io_threads is None
+                      else int(io_threads))
+        if io_threads < 1:
+            raise ValueError(f"io_threads must be >= 1, got {io_threads}")
+        if io_threads > self.lock_shards:
+            warnings.warn(
+                f"io_threads={io_threads} exceeds lock_shards="
+                f"{self.lock_shards}: concurrent preads will serialize on "
+                "the page-cache shard locks; raise --lock-shards to match",
+                stacklevel=2)
+        self.io_threads = io_threads
+        self._pool = (ThreadPoolExecutor(max_workers=io_threads,
+                                         thread_name_prefix="diskstore-io")
+                      if io_threads > 1 else None)
+        self._planner_ctx = IOContext()
+        self._warmed_nodes = 0
         if self._pinned:
             self._preload_pinned()
 
@@ -324,13 +387,52 @@ class DiskStore:
         return os.pread(self._fd[key], self.block_bytes,
                         block * self.block_bytes)
 
-    def _thread_counters(self) -> dict:
-        c = getattr(self._tls, "c", None)
-        if c is None:
-            c = {"requests": 0, "block_fetches": 0, "bytes_fetched": 0,
-                 "hits": 0, "misses": 0, "evictions": 0}
-            self._tls.c = c
-        return c
+    # -- I/O attribution -----------------------------------------------------
+    def make_io_context(self) -> IOContext:
+        """A fresh attribution scope (see ``io_attribution``)."""
+        return IOContext()
+
+    def _current_ctx(self) -> IOContext:
+        """The attribution context this thread's reads bill to: the one
+        installed by ``io_attribution``, else an implicit per-thread
+        context (which keeps the one-batch-per-thread deltas of
+        ``thread_io_counters`` exact for callers that never install
+        one)."""
+        ctx = getattr(self._tls, "ctx", None)
+        if ctx is None:
+            ctx = IOContext()
+            self._tls.ctx = ctx
+        return ctx
+
+    @contextlib.contextmanager
+    def io_attribution(self, ctx: IOContext):
+        """Attribute this thread's reads — and any pread-pool work they
+        fan out — to ``ctx`` for the duration.  The overlapped loader
+        installs one context per minibatch around each stage, so a
+        batch's I/O bill is exact even when its stages run on different
+        threads and its preads on pool threads."""
+        prev = getattr(self._tls, "ctx", None)
+        self._tls.ctx = ctx
+        try:
+            yield ctx
+        finally:
+            self._tls.ctx = prev
+
+    def _submit(self, fn, *args):
+        """Run ``fn`` on the pread pool under the *submitter's*
+        attribution context: pool reads issued on behalf of batch t are
+        billed to batch t, not to the pool thread."""
+        ctx = self._current_ctx()
+
+        def run():
+            prev = getattr(self._tls, "ctx", None)
+            self._tls.ctx = ctx
+            try:
+                return fn(*args)
+            finally:
+                self._tls.ctx = prev
+
+        return self._pool.submit(run)
 
     def _read_range(self, key: str, lo: int, hi: int) -> bytes:
         """Bytes [lo, hi) of array ``key``, block-granular via the cache.
@@ -377,13 +479,11 @@ class DiskStore:
             self._block_fetches += misses
             self._bytes_fetched += nbytes
             self._pinned_hits += pinned_hits
-        t = self._thread_counters()     # per-thread: exact per-batch deltas
-        t["requests"] += 1
-        t["hits"] += hits + pinned_hits
-        t["misses"] += misses
-        t["block_fetches"] += misses
-        t["bytes_fetched"] += nbytes
-        t["evictions"] += evictions
+        # attribution context: exact per-scope (per-batch) deltas, even
+        # when this read runs on a pool thread for another thread's batch
+        self._current_ctx().add(
+            requests=1, hits=hits + pinned_hits, misses=misses,
+            block_fetches=misses, bytes_fetched=nbytes, evictions=evictions)
         buf = parts[0] if len(parts) == 1 else b"".join(parts)
         off = lo - first * B
         return buf[off:off + (hi - lo)]
@@ -394,6 +494,56 @@ class DiskStore:
         raw = self._read_range(key, lo_entry * dt.itemsize,
                                hi_entry * dt.itemsize)
         return np.frombuffer(raw, dtype=dt)
+
+    def _block_disjoint_groups(self, los: np.ndarray, his: np.ndarray,
+                               max_groups: int):
+        """Order the byte ranges and split them into <= ``max_groups``
+        contiguous runs, cutting only between ranges that do not share a
+        disk block — each block is then fetched by exactly one pool
+        task, keeping ``block_fetches`` exact (no duplicate racing
+        fetches of a shared block) under concurrent reads.  Returns
+        index groups into the input arrays, or None when the ranges
+        overlap (caller reads serially)."""
+        order = np.argsort(los, kind="stable")
+        lo_s, hi_s = los[order], his[order]
+        if np.any(lo_s[1:] < hi_s[:-1]):
+            return None
+        B = self.block_bytes
+        allowed = np.flatnonzero(lo_s[1:] // B > (hi_s[:-1] - 1) // B) + 1
+        k = min(max_groups, allowed.size + 1)
+        if k <= 1:
+            return [order]
+        ideal = np.linspace(0, lo_s.size, k + 1)[1:-1]
+        pos = np.unique(allowed[np.minimum(np.searchsorted(allowed, ideal),
+                                           allowed.size - 1)])
+        return np.split(order, pos)
+
+    def _read_group(self, key: str, los, his, idxs) -> list:
+        return [self._read_range(key, int(los[i]), int(his[i]))
+                for i in idxs]
+
+    def _read_many(self, key: str, los, his) -> list:
+        """Bytes of many ranges of array ``key``, in input order.  With a
+        pread pool the ranges are split at disk-block-clean boundaries
+        and the groups read concurrently; all reads stay attributed to
+        the caller's context."""
+        los = np.asarray(los, np.int64)
+        his = np.asarray(his, np.int64)
+        n = los.size
+        if self._pool is None or n < 2 * self.io_threads:
+            return [self._read_range(key, int(lo), int(hi))
+                    for lo, hi in zip(los, his)]
+        groups = self._block_disjoint_groups(los, his, self.io_threads)
+        if groups is None or len(groups) <= 1:
+            return [self._read_range(key, int(lo), int(hi))
+                    for lo, hi in zip(los, his)]
+        futs = [(g, self._submit(self._read_group, key, los, his, g))
+                for g in groups]
+        out: list = [None] * n
+        for g, f in futs:
+            for i, buf in zip(g, f.result()):
+                out[int(i)] = buf
+        return out
 
     def _preload_pinned(self) -> None:
         """Load the pinned hot blocks' payloads eagerly (the §IV-C runtime
@@ -422,6 +572,23 @@ class DiskStore:
         off = np.asarray(offsets, np.int64)
         out = np.empty(off.shape, np.int32)
         ip = self.indptr
+        if self._pool is not None and rows.size >= 2 * self.io_threads:
+            # pooled path: one deduplicated neighbor-list read per
+            # distinct row, fanned out over the pread pool (``requests``
+            # then counts deduped list reads, not per-occurrence touches)
+            dt = self._dtype["indices"]
+            uniq, inverse = np.unique(rows, return_inverse=True)
+            lo = ip[uniq] * dt.itemsize
+            hi = ip[uniq + 1] * dt.itemsize
+            nz = np.flatnonzero(hi > lo)
+            bufs = self._read_many("indices", lo[nz], hi[nz])
+            lists: dict[int, np.ndarray] = {
+                int(j): np.frombuffer(raw, dtype=dt)
+                for j, raw in zip(nz, bufs)}
+            for i, u in enumerate(inverse):
+                lst = lists.get(int(u))
+                out[i] = lst[off[i]] if lst is not None else rows[i]
+            return out
         for i, u in enumerate(rows):
             lo, hi = int(ip[u]), int(ip[u + 1])
             if hi > lo:
@@ -435,21 +602,26 @@ class DiskStore:
         if "features" not in self._arrays:
             raise ValueError(f"{self.path}: store has no feature table")
         F = self.feat_dim
+        dt = self._dtype["features"]
         uniq, inverse = np.unique(ids.reshape(-1), return_inverse=True)
+        lo = uniq.astype(np.int64) * (F * dt.itemsize)
+        bufs = self._read_many("features", lo, lo + F * dt.itemsize)
         rows = np.empty((uniq.size, F), np.float32)
-        for j, u in enumerate(uniq):
-            rows[j] = self._read_array("features", int(u) * F,
-                                       (int(u) + 1) * F)
+        for j, raw in enumerate(bufs):
+            rows[j] = np.frombuffer(raw, dtype=dt)
         return rows[inverse].reshape(ids.shape + (F,))
 
     def gather_labels(self, ids) -> np.ndarray:
         ids = np.asarray(ids)
         if "labels" not in self._arrays:
             raise ValueError(f"{self.path}: store has no labels")
+        dt = self._dtype["labels"]
         uniq, inverse = np.unique(ids.reshape(-1), return_inverse=True)
+        lo = uniq.astype(np.int64) * dt.itemsize
+        bufs = self._read_many("labels", lo, lo + dt.itemsize)
         vals = np.empty(uniq.size, np.int32)
-        for j, u in enumerate(uniq):
-            vals[j] = self._read_array("labels", int(u), int(u) + 1)[0]
+        for j, raw in enumerate(bufs):
+            vals[j] = np.frombuffer(raw, dtype=dt)[0]
         return vals[inverse].reshape(ids.shape)
 
     def gather_edge_blocks(self, blocks, block_e: int) -> np.ndarray:
@@ -457,9 +629,75 @@ class DiskStore:
         the array end — read through the page cache, so device edge-block
         cache misses are real paged disk I/O and land in the counters."""
         from repro.core.graph import read_edge_blocks
-        return read_edge_blocks(
-            lambda lo, hi: self._read_array("indices", lo, hi),
-            blocks, block_e, self.num_edges)
+        blocks_a = np.asarray(blocks, np.int64).reshape(-1)
+        read = lambda lo, hi: self._read_array("indices", lo, hi)  # noqa: E731
+        if self._pool is not None and blocks_a.size >= 2 * self.io_threads:
+            # pre-fetch the distinct blocks' ranges concurrently, then
+            # let the shared slicer assemble from the staged buffers
+            E = self.num_edges
+            dt = self._dtype["indices"]
+            uniq = np.unique(blocks_a)
+            lo_e = uniq * block_e
+            hi_e = np.minimum(lo_e + block_e, E)
+            nz = np.flatnonzero(hi_e > lo_e)
+            bufs = self._read_many("indices", lo_e[nz] * dt.itemsize,
+                                   hi_e[nz] * dt.itemsize)
+            served = {(int(lo_e[j]), int(hi_e[j])):
+                      np.frombuffer(raw, dtype=dt)
+                      for j, raw in zip(nz, bufs)}
+            fallback = read
+            read = lambda lo, hi: (served.get((lo, hi))  # noqa: E731
+                                   if (lo, hi) in served
+                                   else fallback(lo, hi))
+        return read_edge_blocks(read, blocks_a, block_e, self.num_edges)
+
+    # -- planner hook --------------------------------------------------------
+    def warm_nodes(self, nodes, *, features: bool = True,
+                   edges: bool = True) -> int:
+        """Planner pre-admission: asynchronously pull the given nodes'
+        neighbor-list and feature-row byte ranges through the page cache
+        on the pread pool, ahead of the batch that will read them.
+        Fire-and-forget — payloads are dropped; the value is the cache
+        residency when the real read arrives.  Billed to the store's
+        dedicated planner context (``stats()['planner']``), never to a
+        batch.  Returns the number of ranges submitted (0 without a
+        pool: synchronous warming would just move the stall)."""
+        if self._pool is None:
+            return 0
+        nodes = np.unique(np.asarray(nodes, np.int64).reshape(-1))
+        if nodes.size == 0:
+            return 0
+        jobs = []
+        if edges:
+            isz = self._dtype["indices"].itemsize
+            lo = self.indptr[nodes] * isz
+            hi = self.indptr[nodes + 1] * isz
+            nz = hi > lo
+            jobs.append(("indices", lo[nz], hi[nz]))
+        if features and "features" in self._arrays:
+            row = self._dtype["features"].itemsize * self.feat_dim
+            lo = nodes * row
+            jobs.append(("features", lo, lo + row))
+        n = 0
+        prev = getattr(self._tls, "ctx", None)
+        self._tls.ctx = self._planner_ctx     # bind submissions to planner
+        try:
+            for key, lo, hi in jobs:
+                if lo.size == 0:
+                    continue
+                groups = self._block_disjoint_groups(
+                    np.asarray(lo, np.int64), np.asarray(hi, np.int64),
+                    self.io_threads)
+                if groups is None:
+                    continue
+                for g in groups:
+                    self._submit(self._read_group, key, lo, hi, g)
+                    n += len(g)
+        finally:
+            self._tls.ctx = prev
+        with self._stat_lock:
+            self._warmed_nodes += int(nodes.size)
+        return n
 
     # -- accounting ----------------------------------------------------------
     def io_counters(self) -> dict:
@@ -477,18 +715,24 @@ class DiskStore:
                     "evictions": evictions}
 
     def thread_io_counters(self) -> dict:
-        """This thread's share of the I/O.  A minibatch is produced
-        entirely on one worker thread, so deltas of this view give exact
-        per-batch attribution even with concurrent producers (the global
-        ``io_counters`` stay the cross-thread totals)."""
-        return dict(self._thread_counters())
+        """This thread's attribution scope: the installed ``IOContext``
+        (``io_attribution``), else the implicit per-thread context.
+        Either way, deltas of this view give exact per-batch attribution
+        even with concurrent producers *and* pool preads — work the pool
+        runs on this scope's behalf is billed here, not to the pool
+        thread (the global ``io_counters`` stay the cross-thread
+        totals)."""
+        return self._current_ctx().counters()
 
     def stats(self) -> dict:
         return {"kind": self.kind, "policy": self.policy,
                 "cache_mb": self.cache_mb,
                 "cache_blocks": self.cache_blocks,
                 "lock_shards": self.lock_shards,
+                "io_threads": self.io_threads,
                 "nbytes_on_disk": self.nbytes_on_disk(),
+                "planner": dict(self._planner_ctx.counters(),
+                                warmed_nodes=self._warmed_nodes),
                 **self.io_counters()}
 
     def to_csr(self, include_features: bool = True) -> CSRGraph:
@@ -511,6 +755,11 @@ class DiskStore:
                         name=self.name)
 
     def close(self) -> None:
+        if self._pool is not None:
+            # drain before the fds go away: in-flight warms/gathers hold
+            # open descriptors, and cancel whatever hasn't started
+            self._pool.shutdown(wait=True, cancel_futures=True)
+            self._pool = None
         for fd in self._fd.values():
             os.close(fd)
         self._fd = {}

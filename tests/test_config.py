@@ -31,14 +31,15 @@ def rich_spec(**kw):
         backend=BackendSpec(name="pallas"),
         sampler=SamplerSpec(family="khop", fanouts=(10, 5), walk_length=4),
         store=StoreSpec(kind="disk", path="/data/graphstore",
-                        block_bytes=4096, lock_shards=8),
+                        block_bytes=4096, lock_shards=8, io_threads=4),
         cache_tiers=(
             CacheTierSpec(tier="host", policy="pinned", capacity_mb=16.0,
                           pinned_fraction=0.5, arrays=()),
             CacheTierSpec(tier="device", policy="pinned", rows=4096,
                           edge_blocks=512, pinned_fraction=0.5,
                           arrays=("features", "topology"))),
-        prefetch=PrefetchSpec(depth=2),
+        prefetch=PrefetchSpec(depth=2, overlap=True, stage_depth=3,
+                              plan_ahead=2),
         batch_size=64, seed=0, engine="none")
     base.update(kw)
     return PipelineSpec(**base)
