@@ -182,6 +182,8 @@ def _row_name(spec) -> str:
         suffix.append(spec.sampler.family)
     if spec.prefetch.overlap:
         suffix.append("overlap")
+    if spec.store.faults is not None:
+        suffix.append("faults")
     return spec.backend.name + (f"@{'+'.join(suffix)}" if suffix else "")
 
 
@@ -407,6 +409,20 @@ def main(argv=None):
                 print(f"bench_backends,{args.dataset},{row},{kind},"
                       f"hits={dcs['hits']} misses={dcs['misses']} "
                       f"evictions={dcs['evictions']}")
+        st = loader_stats.get("store", {})
+        if any(st.get(k) for k in ("retries", "io_errors", "short_reads",
+                                   "corrupt_blocks", "timeouts")):
+            print(f"bench_backends,{args.dataset},{row},faults,"
+                  f"retries={st['retries']} io_errors={st['io_errors']} "
+                  f"short_reads={st['short_reads']} "
+                  f"corrupt_blocks={st['corrupt_blocks']} "
+                  f"timeouts={st['timeouts']}")
+        if loader_stats.get("lane_stall_restarts") or \
+                loader_stats.get("degraded"):
+            print(f"bench_backends,{args.dataset},{row},lanes,"
+                  f"stall_restarts={loader_stats['lane_stall_restarts']} "
+                  f"failures={loader_stats['lane_failures']} "
+                  f"degraded={loader_stats['degraded']}")
 
     contention = None
     if args.contention_workers:

@@ -1,4 +1,4 @@
 """Fault-tolerant checkpointing (atomic + async + mesh-elastic)."""
 
 from repro.checkpoint.store import (AsyncSaver, latest_step, list_steps,
-                                    prune, restore, save)
+                                    prune, read_manifest, restore, save)

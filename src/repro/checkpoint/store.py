@@ -120,6 +120,20 @@ def latest_step(ckpt_dir: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def read_manifest(ckpt_dir: str, step: int | None = None) -> dict:
+    """Load a checkpoint's JSON manifest (latest step by default) —
+    the step, tree keys, and whatever ``manifest_extra`` the run saved
+    (e.g. the ``pipeline_spec`` dict a resume needs to rebuild the
+    exact data plane)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz.json")
+    with open(path) as f:
+        return json.load(f)
+
+
 def restore(ckpt_dir: str, step: int | None = None, *, shardings=None,
             like=None):
     """Restore a checkpoint.

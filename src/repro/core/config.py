@@ -38,7 +38,8 @@ import json
 import os
 from typing import Sequence
 
-from repro.storage.specs import DEFAULT
+from repro.storage.faults import FaultSpec
+from repro.storage.specs import DEFAULT, RetrySpec
 
 BACKENDS = ("host", "isp", "pallas")
 SAMPLERS = ("khop", "saint")
@@ -110,13 +111,24 @@ class SamplerSpec:
 class StoreSpec:
     """Where the graph arrays live: DRAM (``mem``) or the block-aligned
     on-disk DiskStore layout (``disk``).  ``path=None`` with ``disk``
-    means a pipeline-owned temp directory."""
+    means a pipeline-owned temp directory.
+
+    The fault-tolerance surface rides here too: ``verify`` turns on
+    per-block CRC32C verification of every disk read (the layout must
+    carry checksums — any ``save_graph`` since manifest v2 writes them);
+    ``retry`` is the I/O retry policy every pread runs under; ``faults``
+    attaches the deterministic fault injector (None = no injection —
+    an all-inactive FaultSpec normalizes to None so serialized specs
+    stay canonical)."""
 
     kind: str = "mem"
     path: str | None = None
     block_bytes: int | None = None      # None = storage-spec default
     lock_shards: int | None = None      # None = storage-spec default
     io_threads: int | None = None       # None = storage-spec default (1)
+    verify: bool = False
+    retry: RetrySpec = RetrySpec()
+    faults: FaultSpec | None = None
 
     def __post_init__(self):
         _check(self.kind, "store.kind", STORE_KINDS)
@@ -126,6 +138,25 @@ class StoreSpec:
             raise ValueError("store.lock_shards must be >= 1")
         if self.io_threads is not None and self.io_threads < 1:
             raise ValueError("store.io_threads must be >= 1")
+        object.__setattr__(self, "verify", bool(self.verify))
+        retry = self.retry
+        if retry is None:
+            retry = RetrySpec()
+        elif isinstance(retry, dict):
+            retry = RetrySpec(**retry)
+        object.__setattr__(self, "retry", retry)
+        faults = self.faults
+        if isinstance(faults, dict):
+            faults = FaultSpec(**faults)
+        if faults is not None and not faults.active:
+            faults = None               # canonical form: inactive = absent
+        object.__setattr__(self, "faults", faults)
+        if self.faults is not None and self.faults.bitflip_rate > 0 \
+                and not self.verify:
+            raise ValueError(
+                "store.faults.bitflip_rate > 0 needs store.verify=True: "
+                "without checksum verification a flipped bit is silently "
+                "trained on instead of detected and retried")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -217,6 +248,8 @@ class PrefetchSpec:
     overlap: bool = False
     stage_depth: int = 2
     plan_ahead: int = 0
+    lane_timeout_s: float = 30.0        # stall watchdog: heartbeat budget
+    max_lane_restarts: int = 3          # then degrade to sync composition
 
     def __post_init__(self):
         object.__setattr__(self, "overlap", bool(self.overlap))
@@ -230,6 +263,10 @@ class PrefetchSpec:
             raise ValueError("prefetch.overlap needs depth >= 1 (the "
                              "overlapped pipeline drains through the "
                              "prefetch queue)")
+        if self.lane_timeout_s <= 0:
+            raise ValueError("prefetch.lane_timeout_s must be > 0")
+        if self.max_lane_restarts < 0:
+            raise ValueError("prefetch.max_lane_restarts must be >= 0")
 
 
 _COMPONENTS = {
@@ -374,6 +411,7 @@ class Pipeline:
         self.notes: list[str] = []
         self._owns_store = owns_store
         self._tmpdir = tmpdir
+        self._closed = False
 
     @property
     def backend(self) -> str:
@@ -398,6 +436,10 @@ class Pipeline:
         s = self.spec
         bits = [f"backend={s.backend.name}", f"sampler={s.sampler.family}",
                 f"store={s.store.kind}"]
+        if s.store.verify:
+            bits.append("verify=crc32c")
+        if s.store.faults is not None:
+            bits.append("faults=injected")
         if s.engine != "none":
             bits.append(f"engine={s.engine}")
         if s.prefetch.depth:
@@ -420,6 +462,9 @@ class Pipeline:
         return ", ".join(bits)
 
     def close(self) -> None:
+        if self._closed:                # idempotent: finally-blocks and
+            return                      # __exit__ may both reach here
+        self._closed = True
         try:
             self.loader.close()
         finally:
@@ -495,6 +540,9 @@ def build_pipeline(spec: PipelineSpec, graph_or_store=None, *, g=None,
                 store_kw["lock_shards"] = spec.store.lock_shards
             if spec.store.io_threads is not None:
                 store_kw["io_threads"] = spec.store.io_threads
+            store_kw["verify"] = spec.store.verify
+            store_kw["retry"] = spec.store.retry
+            store_kw["faults"] = spec.store.faults
             store = open_store("disk", g=g, path=path,
                                block_bytes=spec.store.block_bytes,
                                cache_mb=None if host is None
@@ -590,6 +638,50 @@ FLAG_TABLE = {
         help="disk-store pread pool size: concurrent block fetches per "
              "multi-range gather (default: storage spec, 1 = serial "
              "reads; keep <= --lock-shards)")),
+    "--verify-blocks": ("store.verify", dict(
+        type=int, choices=(0, 1), metavar="0|1",
+        help="1 = verify the per-block CRC32C checksum on every disk "
+             "read (needs a layout saved with checksums; mismatches "
+             "count as corrupt_blocks and are retried)")),
+    "--io-retries": ("store.retry.max_attempts", dict(
+        type=int,
+        help="disk-store I/O retry policy: total attempts per block "
+             "read before StoreReadError (1 = no retry)")),
+    "--io-retry-backoff": ("store.retry.backoff_s", dict(
+        type=float,
+        help="disk-store I/O retry policy: sleep before the first "
+             "retry, doubled per further retry (deterministic jitter)")),
+    "--io-deadline": ("store.retry.deadline_s", dict(
+        type=float,
+        help="disk-store I/O retry policy: per-attempt wall-clock "
+             "budget in seconds (overruns count as timeouts)")),
+    "--lane-timeout": ("prefetch.lane_timeout_s", dict(
+        type=float,
+        help="overlapped pipeline: lane heartbeat budget in seconds "
+             "before the stall watchdog restarts the lanes")),
+    "--max-lane-restarts": ("prefetch.max_lane_restarts", dict(
+        type=int,
+        help="overlapped pipeline: watchdog restarts before degrading "
+             "permanently to synchronous composition")),
+    "--fault-seed": ("store.faults.seed", dict(
+        type=int,
+        help="fault injection: deterministic schedule seed")),
+    "--fault-eio": ("store.faults.eio_rate", dict(
+        type=float,
+        help="fault injection: per-(block, first attempt) probability "
+             "of a transient EIO (0 = off)")),
+    "--fault-short-read": ("store.faults.short_read_rate", dict(
+        type=float,
+        help="fault injection: probability of a truncated pread")),
+    "--fault-bitflip": ("store.faults.bitflip_rate", dict(
+        type=float,
+        help="fault injection: probability of a flipped payload bit "
+             "(needs --verify-blocks 1 to be detectable)")),
+    "--fault-stall": ("store.faults.stall_rate", dict(
+        type=float,
+        help="fault injection: probability of a stalled pread")),
+    "--fault-stall-s": ("store.faults.stall_s", dict(
+        type=float, help="fault injection: stalled-pread duration")),
     "--cache-mb": ("cache.capacity_mb", dict(
         type=float,
         help="host tier: disk-store page-cache budget in MB (default: "
@@ -640,6 +732,9 @@ def _spec_defaults() -> dict:
             rows=0, edge_blocks=0,
             pinned_fraction=DEFAULT.devcache.pinned_fraction,
             arrays=("features",))
+        # faults is None in the canonical spec; the flag paths need a
+        # scratch dict to write through (all-zero normalizes back to None)
+        d["store"]["faults"] = dataclasses.asdict(FaultSpec())
         _DEFAULT_SPEC = d
     return _DEFAULT_SPEC
 
@@ -717,6 +812,10 @@ def spec_from_args(args) -> PipelineSpec:
         base = PipelineSpec.load(spec_path)
 
     tree = base.to_dict() if base is not None else PipelineSpec().to_dict()
+    # the faults flags need a dict to write through even when the base
+    # spec carries none (StoreSpec normalizes all-inactive back to None)
+    if tree["store"].get("faults") is None:
+        tree["store"]["faults"] = dict(defaults["store"]["faults"])
     # scratch dicts for the two tiers, seeded from the base spec's tiers
     cache = dict(defaults["cache"])
     devcache = dict(defaults["devcache"])

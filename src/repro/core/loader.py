@@ -65,6 +65,7 @@ from repro.core.config import (BackendSpec, CacheTierSpec, PipelineSpec,
 from repro.core.graph import CSRGraph
 from repro.core.sampler import (DEFAULT_FANOUTS, SampleTrace, _io_delta,
                                 _io_snapshot, sample_khop, saint_random_walk)
+from repro.storage.store import StoreReadError, nest_fault_counters
 
 
 @dataclasses.dataclass
@@ -218,9 +219,15 @@ def _build_loader(spec: PipelineSpec, *, g: CSRGraph | None, store=None,
     if spec.prefetch.depth:
         if spec.prefetch.overlap:
             from repro.core.pipeline import OverlappedLoader
-            loader = OverlappedLoader(loader, depth=spec.prefetch.depth,
-                                      stage_depth=spec.prefetch.stage_depth,
-                                      plan_ahead=spec.prefetch.plan_ahead)
+            faults = getattr(spec.store, "faults", None)
+            loader = OverlappedLoader(
+                loader, depth=spec.prefetch.depth,
+                stage_depth=spec.prefetch.stage_depth,
+                plan_ahead=spec.prefetch.plan_ahead,
+                lane_timeout=spec.prefetch.lane_timeout_s,
+                max_lane_restarts=spec.prefetch.max_lane_restarts,
+                stall_inject=(faults.lane_stall
+                              if faults is not None else None))
         else:
             from repro.core.pipeline import PrefetchingLoader
             loader = PrefetchingLoader(loader, depth=spec.prefetch.depth)
@@ -498,6 +505,8 @@ class PallasSubgraphLoader(_LoaderBase):
         import jax
         import jax.numpy as jnp
         from repro.kernels import ops
+        self._devcache_bypass = False   # permanent once tripped
+        self._bypass_events = 0
         self.indptr = jnp.asarray(g.indptr, jnp.int32)
         # labels live on device too: the per-batch gather happens inside
         # the jitted prepare, not via host numpy indexing per call
@@ -636,6 +645,33 @@ class PallasSubgraphLoader(_LoaderBase):
         return dict(targets=targets, hops=hops, labels=labels,
                     ctx=ctx, io0=io0, edge_io=edge_io)
 
+    def reset_staged_state(self) -> None:
+        """Discard cache-mirror state staged by abandoned in-flight plans
+        (``OverlappedLoader`` calls this before a deterministic lane
+        replay): every planned-but-never-installed slot would otherwise
+        stay marked resident forever — a ghost entry serving garbage."""
+        if self.devcache is not None and not self._devcache_bypass:
+            self.devcache.reset()
+        if self.edgecache is not None:
+            self.edgecache.reset()
+
+    def _note_devcache_failure(self, exc: BaseException) -> None:
+        """Degrade policy: a feature-cache fetch that failed *past* the
+        store's own retry budget means the cached path cannot make
+        progress — bypass it permanently (direct ``gather_features``
+        per batch) rather than failing training."""
+        self._devcache_bypass = True
+        self._bypass_events += 1
+        warnings.warn(
+            f"device feature cache fetch failed past the retry policy "
+            f"({exc}); bypassing the cache permanently — features now "
+            f"fetched directly from the store each batch (slower, "
+            f"bit-identical)", stacklevel=2)
+        try:
+            self.devcache.reset(preload=False)
+        except Exception:
+            pass                        # device state is unreachable anyway
+
     def _stage_resolve(self, s: dict) -> dict:
         """Plan + fetch the batch's feature-cache misses.  The plan is
         made serially in batch order under the cache lock (reserving
@@ -646,26 +682,46 @@ class PallasSubgraphLoader(_LoaderBase):
         hop_ids = [np_.asarray(h) for h in s["hops"]]
         uniq = np_.unique(np_.concatenate([h.reshape(-1) for h in hop_ids]))
         s["hop_ids"], s["uniq"] = hop_ids, uniq
-        if self.devcache is not None:
+        if self.devcache is not None and not self._devcache_bypass:
             # dispatch-pad the unique set to a power of two (repeating the
             # last id, so pads are cache hits): U varies every batch, and
             # an unbucketed width would recompile the downstream take per
             # batch
-            with self._attr(s["ctx"]):
-                plan = self.devcache.plan_rows(
-                    self._pad_pow2(uniq, uniq[-1]), n_valid=uniq.size)
-                self.devcache.fetch_plan(plan)
-            s["plan"] = plan
+            try:
+                with self._attr(s["ctx"]):
+                    plan = self.devcache.plan_rows(
+                        self._pad_pow2(uniq, uniq[-1]), n_valid=uniq.size)
+                    self.devcache.fetch_plan(plan)
+                s["plan"] = plan
+            except StoreReadError as e:
+                self._note_devcache_failure(e)
+                s["plan"] = None
         return s
 
     def _stage_admit(self, s: dict) -> Minibatch:
         """Install the fetched rows (H2D upload), gather on device, and
-        assemble the Minibatch with the batch's exact io attribution."""
+        assemble the Minibatch with the batch's exact io attribution.
+        With the feature cache bypassed (``_note_devcache_failure``) the
+        batch's unique rows are fetched straight from the store instead —
+        the same rows in the same order, so training stays bit-identical;
+        only the transfer volume and counters differ."""
         jnp, np_ = self._jnp, np
         hop_ids, uniq = s["hop_ids"], s["uniq"]
-        if self.devcache is not None:
-            rows = self.devcache.execute_plan(s["plan"])
+        plan = s.get("plan")
+        if self.devcache is not None and plan is not None:
+            rows = self.devcache.execute_plan(plan)
             F = self.devcache.feat_dim
+            hop_feats = []
+            for h in hop_ids:
+                pos = np_.searchsorted(uniq, h.reshape(-1))
+                hop_feats.append(jnp.take(rows, jnp.asarray(pos, jnp.int32),
+                                          axis=0).reshape(h.shape + (F,)))
+        elif self.devcache is not None:
+            # bypass path: direct store gather of the batch's unique rows
+            with self._attr(s["ctx"]):
+                rows = jnp.asarray(self.store.gather_features(uniq),
+                                   jnp.float32)
+            F = int(rows.shape[1])
             hop_feats = []
             for h in hop_ids:
                 pos = np_.searchsorted(uniq, h.reshape(-1))
@@ -678,8 +734,12 @@ class PallasSubgraphLoader(_LoaderBase):
             io = s["ctx"].counters()
         else:
             io = _io_delta(self.store, s["io0"]) or {}
+        io = nest_fault_counters(io)
         if self.devcache is not None:
-            io["devcache"] = dict(s["plan"].counters)
+            if plan is not None:
+                io["devcache"] = dict(plan.counters)
+            else:
+                io["devcache_bypass"] = True
         if s["edge_io"] is not None:
             io["edgecache"] = s["edge_io"]
         trace = SampleTrace(touched_nodes=np_.empty(0, np_.int64),
@@ -687,6 +747,11 @@ class PallasSubgraphLoader(_LoaderBase):
         return Minibatch(targets=s["targets"], hop_ids=list(s["hops"]),
                          hop_feats=hop_feats, labels=s["labels"],
                          trace=trace)
+
+    def stats(self) -> dict:
+        return dict(super().stats(),
+                    devcache_bypass=self._devcache_bypass,
+                    devcache_bypass_events=self._bypass_events)
 
     def warm_batch(self, idx: int) -> int:
         """Frontier planner hook: pre-pull batch ``idx``'s probable byte

@@ -21,6 +21,7 @@ import dataclasses
 import queue
 import threading
 import time
+import warnings
 from typing import Callable
 
 import numpy as np
@@ -28,6 +29,7 @@ import numpy as np
 from repro.core.loader import Minibatch, batch_targets
 from repro.core.sampler import (DEFAULT_FANOUTS, _io_delta, _io_snapshot,
                                 sample_khop, saint_random_walk)
+from repro.storage.store import nest_fault_counters
 
 
 @dataclasses.dataclass
@@ -81,7 +83,7 @@ def make_host_producer(store, batch_size: int, fanouts=DEFAULT_FANOUTS,
         # widen the sampler's measured span to cover the feature and label
         # gathers too; the thread-scoped counters make the per-batch delta
         # exact (one batch = one producer thread)
-        trace.io = _io_delta(store, io0)
+        trace.io = nest_fault_counters(_io_delta(store, io0))
         if storage_cost_fn is not None:
             time.sleep(storage_cost_fn(trace))
         return Minibatch(targets=targets, hop_ids=list(trace.hops),
@@ -236,16 +238,42 @@ class OverlappedLoader:
     known ahead of time because batches are pure functions of the
     index) through the store's page cache on the pread pool.  Warms are
     advisory: they only populate the host page cache, never device or
-    cache-mirror state, so they cannot perturb bit-identity."""
+    cache-mirror state, so they cannot perturb bit-identity.
+
+    Lane supervision (fault tolerance): every lane maintains a
+    heartbeat, refreshed at each loop turn — including while blocked on
+    a bounded-queue put/get, so a stale beat means *stuck inside a stage
+    function*, not waiting for work.  A lane exception is recorded in a
+    shared slot as well as forwarded through the queues, and the
+    consumer checks the slot on every empty poll — a dead lane raises at
+    the consumer within one poll tick, never a hang.  When the consumer
+    is starved and a heartbeat is older than ``lane_timeout`` seconds,
+    the watchdog restarts the pipeline from the batch being waited on
+    (deterministic replay: batches are pure functions of the index);
+    stalls beyond ``max_lane_restarts`` degrade the loader permanently
+    to synchronous composition (``inner.get_batch``) with a loud warning
+    — training continues, slower, rather than crashing.  Restarts and
+    degradation call ``inner.reset_staged_state()`` (when present) so
+    cache plans abandoned mid-flight cannot leave ghost residency; an
+    orphaned lane that survives a restart (join timeout) drains into its
+    dead generation's queues and its stale plans fail loudly at install
+    (``StaleAdmissionPlan``) instead of corrupting the new generation.
+
+    ``stall_inject=(batch, seconds)`` schedules one deterministic sample
+    -lane stall (chaos testing, from ``FaultSpec.lane_stall_batch``)."""
 
     def __init__(self, inner, *, depth: int = 2, stage_depth: int = 2,
-                 plan_ahead: int = 0):
+                 plan_ahead: int = 0, lane_timeout: float = 30.0,
+                 max_lane_restarts: int = 3,
+                 stall_inject: tuple[int, float] | None = None):
         self.inner = inner
         self.backend = getattr(inner, "backend", "?")
         self.fanouts = tuple(inner.fanouts)
         self.depth = max(1, int(depth))
         self.stage_depth = max(1, int(stage_depth))
         self.plan_ahead = max(0, int(plan_ahead))
+        self.lane_timeout = float(lane_timeout)
+        self.max_lane_restarts = int(max_lane_restarts)
         get_stages = getattr(inner, "pipeline_stages", None)
         stages = get_stages() if get_stages is not None else None
         if not stages:
@@ -264,10 +292,29 @@ class OverlappedLoader:
         self._warmed = 0
         self._t_started: float | None = None
         self._t_stopped: float | None = None
+        # supervision state
+        self._gen = 0                      # lane generation (guards beats
+        self._beat: dict[str, float] = {}  # ...and error reports from
+        self._lane_error = None            # ...orphaned old lanes)
+        self._lane_failures = 0
+        self._lane_stall_restarts = 0
+        self._degraded = False
+        self._stall_inject = stall_inject
+        self._stall_done = False
 
     # -- lanes ---------------------------------------------------------------
-    def _put(self, q: queue.Queue, item, stop: threading.Event) -> bool:
+    def _beat_tick(self, gen: int, name: str) -> None:
+        if gen == self._gen:
+            self._beat[name] = time.perf_counter()
+
+    def _note_error(self, gen: int, idx: int, e: BaseException) -> None:
+        if gen == self._gen and self._lane_error is None:
+            self._lane_error = (idx, e)
+
+    def _put(self, q: queue.Queue, item, stop: threading.Event,
+             gen: int, name: str) -> bool:
         while not stop.is_set():                # backpressure, abortable
+            self._beat_tick(gen, name)          # blocked on put = healthy
             try:
                 q.put(item, timeout=0.05)
                 return True
@@ -275,13 +322,21 @@ class OverlappedLoader:
                 continue
         return False
 
-    def _source(self, start: int, qout: queue.Queue, stop: threading.Event):
+    def _source(self, start: int, qout: queue.Queue, stop: threading.Event,
+                gen: int):
         """Stage-0 lane: batch index -> first payload, plus the planner
         (page-cache warming for the plan-ahead window)."""
         name, fn = self._stages[0]
         idx = start
         warmed_to = start                       # warm [start, idx+1+W)
         while not stop.is_set():
+            self._beat_tick(gen, name)
+            si = self._stall_inject
+            if si is not None and idx == si[0] and not self._stall_done:
+                # flag first: the watchdog restart must not re-stall the
+                # replayed batch
+                self._stall_done = True
+                time.sleep(si[1])
             if self._warm is not None and self.plan_ahead:
                 while warmed_to < idx + 1 + self.plan_ahead:
                     try:
@@ -294,17 +349,20 @@ class OverlappedLoader:
                 item = (idx, fn(idx), None)
             except BaseException as e:          # surfaced on the consumer
                 item = (idx, None, e)
+                self._note_error(gen, idx, e)
             self._stage_s[name] += time.perf_counter() - t0
             self._stage_n[name] += 1
-            if not self._put(qout, item, stop) or item[2] is not None:
+            if not self._put(qout, item, stop, gen, name) \
+                    or item[2] is not None:
                 return
             idx += 1
 
     def _lane(self, k: int, qin: queue.Queue, qout: queue.Queue,
-              stop: threading.Event):
+              stop: threading.Event, gen: int):
         """Stage-k lane (k >= 1): previous payload -> next payload."""
         name, fn = self._stages[k]
         while not stop.is_set():
+            self._beat_tick(gen, name)
             try:
                 idx, payload, err = qin.get(timeout=0.05)
             except queue.Empty:
@@ -315,18 +373,36 @@ class OverlappedLoader:
                     payload = fn(payload)
                 except BaseException as e:
                     payload, err = None, e
+                    self._note_error(gen, idx, e)
                 self._stage_s[name] += time.perf_counter() - t0
                 self._stage_n[name] += 1
-            if not self._put(qout, (idx, payload, err), stop) \
+            if not self._put(qout, (idx, payload, err), stop, gen, name) \
                     or err is not None:
                 return
+
+    def _reset_inner(self) -> None:
+        """Drop the inner loader's staged cache state: plans abandoned by
+        the dying generation reserved cache-mirror slots whose device
+        rows will never install (ghost residency)."""
+        reset = getattr(self.inner, "reset_staged_state", None)
+        if reset is None:
+            return
+        try:
+            reset()
+        except Exception as e:                  # pragma: no cover
+            warnings.warn(f"overlapped pipeline: reset_staged_state failed "
+                          f"({e!r}); continuing with possibly-cold caches",
+                          stacklevel=2)
 
     def _restart(self, start: int):
         if self._threads:
             self._stop.set()
+            self._gen += 1          # orphans' beats/errors no longer count
+            self._lane_error = None
             for t in self._threads:
                 t.join(timeout=5.0)
             self._restarts += 1
+            self._reset_inner()
         # fresh queues per generation: a lane that outlives a restart
         # (join timeout mid-production) drains into its own dead queues
         # instead of corrupting the replacement's ordering
@@ -335,13 +411,18 @@ class OverlappedLoader:
                         for _ in range(n - 1)]
         self._queues.append(queue.Queue(maxsize=self.depth))
         self._stop = threading.Event()
+        gen = self._gen
+        now = time.perf_counter()
+        self._beat = {name: now for name in self.stage_names}
         self._threads = [threading.Thread(
-            target=self._source, args=(start, self._queues[0], self._stop),
+            target=self._source,
+            args=(start, self._queues[0], self._stop, gen),
             daemon=True, name="overlap-" + self.stage_names[0])]
         for k in range(1, n):
             self._threads.append(threading.Thread(
                 target=self._lane,
-                args=(k, self._queues[k - 1], self._queues[k], self._stop),
+                args=(k, self._queues[k - 1], self._queues[k], self._stop,
+                      gen),
                 daemon=True, name="overlap-" + self.stage_names[k]))
         for t in self._threads:
             t.start()
@@ -349,8 +430,29 @@ class OverlappedLoader:
         if self._t_started is None:
             self._t_started = time.perf_counter()
 
+    def _degrade(self) -> None:
+        """Permanent fallback to synchronous composition: stop feeding the
+        lanes and serve every future batch via ``inner.get_batch`` on the
+        consumer thread.  Values are unaffected — the sync path composes
+        the same stage functions — only the overlap is lost."""
+        warnings.warn(
+            f"overlapped pipeline: lanes stalled beyond the restart budget "
+            f"(max_lane_restarts={self.max_lane_restarts}); degrading "
+            "permanently to synchronous composition — training continues "
+            "without overlap", stacklevel=3)
+        self._degraded = True
+        self._gen += 1
+        self._lane_error = None
+        self._stop.set()                # orphans are daemons; let them die
+        self._threads = []
+        self._reset_inner()
+        if self._t_started is not None and self._t_stopped is None:
+            self._t_stopped = time.perf_counter()
+
     # -- consumer side -------------------------------------------------------
     def get_batch(self, idx: int, timeout: float = 60.0):
+        if self._degraded:
+            return self.inner.get_batch(idx)
         if not self._threads or idx != self._expect:
             self._restart(idx)
         t0 = time.perf_counter()
@@ -360,11 +462,41 @@ class OverlappedLoader:
                 got, batch, err = out.get(timeout=0.05)
                 break
             except queue.Empty:
-                if time.perf_counter() - t0 > timeout:
+                le = self._lane_error
+                if le is not None and le[0] <= idx:
+                    # the lane died at or before the batch we're waiting
+                    # for, and its poison item may be stuck behind a full
+                    # intermediate queue — raise from the shared slot now;
+                    # the dead generation's queues are discarded by the
+                    # restart the next request triggers
+                    self._lane_error = None
+                    self._expect = None
+                    self._lane_failures += 1
+                    raise le[1]
+                now = time.perf_counter()
+                stalled = [name for name, b in self._beat.items()
+                           if now - b > self.lane_timeout]
+                if stalled:
+                    self._lane_stall_restarts += 1
+                    if self._lane_stall_restarts > self.max_lane_restarts:
+                        self._degrade()
+                        return self.inner.get_batch(idx)
+                    warnings.warn(
+                        f"overlapped pipeline: lane(s) {stalled} missed "
+                        f"their heartbeat for > {self.lane_timeout}s; "
+                        f"restarting from batch {idx} (deterministic "
+                        "replay)", stacklevel=2)
+                    self._restart(idx)
+                    out = self._queues[-1]
+                    t0 = time.perf_counter()
+                    continue
+                if now - t0 > timeout:
                     raise TimeoutError(f"batch {idx} not produced by the "
                                        "overlapped pipeline")
         if err is not None:
+            self._lane_error = None
             self._expect = None                 # force a clean restart
+            self._lane_failures += 1
             raise err
         assert got == idx, f"overlap order violated: {got} != {idx}"
         self._expect = idx + 1
@@ -399,7 +531,11 @@ class OverlappedLoader:
                     planner_warm_ranges=self._warmed,
                     pipeline_wall_s=wall,
                     # > 1.0 iff the lanes actually ran concurrently
-                    overlap_factor=(busy / wall if wall > 0 else 0.0))
+                    overlap_factor=(busy / wall if wall > 0 else 0.0),
+                    lane_timeout=self.lane_timeout,
+                    lane_failures=self._lane_failures,
+                    lane_stall_restarts=self._lane_stall_restarts,
+                    degraded=self._degraded)
 
     def close(self) -> None:
         self._stop.set()
@@ -427,6 +563,7 @@ class ProducerConsumerPipeline:
         self.stats = PipelineStats()
         self._tasks: queue.Queue = queue.Queue()
         self._results: dict[int, object] = {}
+        self._errors: dict[int, BaseException] = {}
         self._results_lock = threading.Condition()
         self._issued: dict[int, float] = {}
         self._stop = threading.Event()
@@ -449,7 +586,16 @@ class ProducerConsumerPipeline:
             t0 = time.perf_counter()
             if self.produce_delay_s:
                 time.sleep(self.produce_delay_s)
-            batch = self.produce_fn(idx)
+            try:
+                batch = self.produce_fn(idx)
+            except BaseException as e:
+                # a dying worker must wake the consumer, not leave it
+                # blocked until its 30 s timeout: park the exception where
+                # get_batch's wait loop checks on every tick
+                with self._results_lock:
+                    self._errors[idx] = e
+                    self._results_lock.notify_all()
+                continue
             dt = time.perf_counter() - t0
             with self._results_lock:
                 if idx < self._watermark:
@@ -472,6 +618,8 @@ class ProducerConsumerPipeline:
                 # results below the jump can never be consumed — free them
                 for k in [k for k in self._results if k < upto]:
                     del self._results[k]
+                for k in [k for k in self._errors if k < upto]:
+                    del self._errors[k]
         while self._next_issue <= upto + self._queue_depth - 1:
             self._tasks.put(self._next_issue)
             self._issued[self._next_issue] = time.perf_counter()
@@ -496,6 +644,8 @@ class ProducerConsumerPipeline:
         t0 = time.perf_counter()
         with self._results_lock:
             while idx not in self._results:
+                if idx in self._errors:
+                    raise self._errors.pop(idx)
                 self._results_lock.wait(timeout=0.02)
                 self._maybe_reissue(idx)
                 if time.perf_counter() - t0 > timeout:

@@ -48,10 +48,19 @@ def _parse():
                     help="mesh shape, e.g. 4x1 (default: devices x 1)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir "
+                         "(error if none exists); without --spec, the data "
+                         "plane is rebuilt from the pipeline_spec embedded "
+                         "in the checkpoint manifest, so the resumed run's "
+                         "batches are bit-identical to the original's")
     ap.add_argument("--hidden", type=int, default=128)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume needs --ckpt-dir (where would the checkpoint "
+                 "come from?)")
     from repro.core.config import (fill_pipeline_flag_defaults,
                                    spec_from_args)
     if args.arch == "graphsage":
@@ -101,6 +110,17 @@ def run_gnn(args, mesh):
     from repro.optim import adamw
 
     spec = args.pipeline_spec
+    if args.resume:
+        if ckpt.latest_step(args.ckpt_dir) is None:
+            raise SystemExit(
+                f"[train] --resume: no checkpoints in {args.ckpt_dir}")
+        if not getattr(args, "spec", None):
+            manifest = ckpt.read_manifest(args.ckpt_dir)
+            if "pipeline_spec" in manifest:
+                from repro.core.config import PipelineSpec
+                spec = PipelineSpec.from_dict(manifest["pipeline_spec"])
+                print("[train] --resume: data plane restored from the "
+                      "checkpoint manifest's pipeline_spec")
     fanouts = spec.effective_fanouts
     g = load_dataset(args.dataset, large_scale=args.large_scale)
     pipe = build_pipeline(spec, g, mesh=mesh)
@@ -215,6 +235,9 @@ def run_lm(args, mesh):
         state = init_train_state(model, opt, jax.random.key(0))
         start = 0
         saver = None
+        if args.resume and ckpt.latest_step(args.ckpt_dir) is None:
+            raise SystemExit(
+                f"[train] --resume: no checkpoints in {args.ckpt_dir}")
         if args.ckpt_dir:
             saver = ckpt.AsyncSaver(args.ckpt_dir)
             latest = ckpt.latest_step(args.ckpt_dir)

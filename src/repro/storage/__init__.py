@@ -5,8 +5,9 @@ paper's six design points (DESIGN.md §2)."""
 from repro.storage.blockdev import (EDGE_ENTRY_BYTES, BlockTrace, LRUCache,
                                     PinnedCache, block_trace,
                                     select_pinned_blocks)
-from repro.storage.devcache import (DeviceArrayCache, DeviceEdgeBlockCache,
-                                    DeviceFeatureCache, edge_block_count)
+from repro.storage.devcache import (AdmissionPlan, DeviceArrayCache,
+                                    DeviceEdgeBlockCache, DeviceFeatureCache,
+                                    StaleAdmissionPlan, edge_block_count)
 from repro.storage.e2e import (E2EResult, capacity_report, e2e_train,
                                feature_gather_time, gnn_step_flops,
                                gpu_step_time)
@@ -15,6 +16,10 @@ from repro.storage.engines import (ENGINES, BatchCost, DirectIOEngine,
                                    ISPOracleEngine, MeasuredEngine,
                                    MmapSSDEngine, PMEMEngine, StorageEngine,
                                    make_engine, throughput)
-from repro.storage.specs import DEFAULT, DeviceCacheSpec, SystemSpec
+from repro.storage.faults import FaultInjector, FaultSpec
+from repro.storage.integrity import block_checksums, crc32c
+from repro.storage.specs import (DEFAULT, DeviceCacheSpec, RetrySpec,
+                                 SystemSpec)
 from repro.storage.store import (DiskStore, GraphStore, InMemoryStore,
-                                 open_store, save_graph)
+                                 IOContext, StoreReadError,
+                                 nest_fault_counters, open_store, save_graph)

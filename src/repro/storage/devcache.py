@@ -108,10 +108,24 @@ class AdmissionPlan:
     end of the mirror and assigns victim slots immediately, so a later
     batch's plan can only evict what this plan no longer needs; because
     installs+gathers replay strictly in plan order on a single lane,
-    an in-flight batch's rows are never evicted before its gather."""
+    an in-flight batch's rows are never evicted before its gather.
+
+    ``generation`` pins the plan to the mirror state it was made
+    against: a ``reset()`` (pipeline-restart recovery) bumps the cache
+    generation, and executing a plan from a previous generation raises
+    ``StaleAdmissionPlan`` instead of scattering into slots whose
+    reservations no longer exist."""
 
     segments: list
     counters: dict
+    generation: int = 0
+
+
+class StaleAdmissionPlan(RuntimeError):
+    """An ``AdmissionPlan`` outlived a cache ``reset()``: its reserved
+    slots refer to a discarded mirror state.  Raised by the install/
+    execute stages so an orphaned pipeline lane can never corrupt the
+    post-restart cache."""
 
 
 class DeviceArrayCache:
@@ -150,6 +164,8 @@ class DeviceArrayCache:
         self.hits = self.misses = self.evictions = 0
         self.preload_rows = 0
         self.bytes_uploaded = 0
+        self._generation = 0
+        self.resets = 0
 
         if self.policy == "pinned":
             if self.capacity < 2:
@@ -207,12 +223,15 @@ class DeviceArrayCache:
     def _preload_pinned(self) -> None:
         """Stage the pinned hot entries eagerly (the §IV-C runtime stages
         its scratchpad before training starts).  The fetches are real
-        backing reads but count as ``preload_rows``, not misses."""
+        backing reads but count as ``preload_rows``, not misses.
+        Delta-based so a post-``reset`` re-preload leaves the cumulative
+        hit/miss/eviction counters untouched."""
         with self._lock:
+            h, m, e = self.hits, self.misses, self.evictions
             self._resolve(self._pinned_ids)
             self._slot_pinned[self._host_slot[self._pinned_ids]] = True
-            self.preload_rows = self.misses
-            self.hits = self.misses = self.evictions = 0
+            self.preload_rows += self.misses - m
+            self.hits, self.misses, self.evictions = h, m, e
 
     def _segments(self, ids: np.ndarray):
         """Split ``ids`` (order preserved) so each segment's non-pinned
@@ -360,6 +379,7 @@ class DeviceArrayCache:
             "bytes_uploaded": 0})
         offset = 0
         with self._lock:
+            plan.generation = self._generation
             for seg in self._segments(ids):
                 if seg.size == 0:
                     continue
@@ -382,11 +402,48 @@ class DeviceArrayCache:
             self._fetch_segment(ps)
         return plan
 
+    def check_generation(self, plan: AdmissionPlan) -> None:
+        """Refuse to perform device mutations for a plan made against a
+        pre-``reset`` mirror (its slot reservations are gone)."""
+        if plan.generation != self._generation:
+            raise StaleAdmissionPlan(
+                f"device {self.array} cache: plan from generation "
+                f"{plan.generation} cannot install into generation "
+                f"{self._generation} (cache was reset)")
+
     def install_plan(self, plan: AdmissionPlan) -> None:
         """Stage three: scatter the fetched segments into their reserved
         slots, strictly in plan order, from a single lane."""
+        self.check_generation(plan)
         for ps in plan.segments:
             self._install_segment(ps)
+
+    def reset(self, *, preload: bool = True) -> None:
+        """Drop every entry and rebuild the mirror from scratch — the
+        recovery hook for abandoned in-flight plans.  A pipeline restart
+        (or a fetch that failed beyond the retry policy) can leave plans
+        that reserved mirror slots whose device rows were never
+        installed: those ids look resident but their slots hold stale
+        bits.  Rather than repair reservations plan by plan, restart the
+        cache empty — values are unaffected (the cache is a pure
+        performance tier), only future hit/miss counters shift.  Bumps
+        the generation so any surviving plan fails loudly at install."""
+        jnp = self._jnp
+        with self._lock:
+            self._generation += 1
+            self.resets += 1
+            n = self.num_entries
+            self._host_slot = np.full(n + 1, -1, np.int64)
+            self._slot_entry = np.full(self.capacity, -1, np.int64)
+            self._slot_stamp = np.zeros(self.capacity, np.int64)
+            self._slot_pinned = np.zeros(self.capacity, bool)
+            self._free = np.arange(self.capacity)
+            self._free_ptr = 0
+            self._clock = 0
+            # stale table payloads are unreachable once slot_of is cleared
+            self.slot_of = jnp.full((n + 1,), -1, jnp.int32)
+        if preload and self._pinned_ids.size:
+            self._preload_pinned()
 
     # -- read paths ----------------------------------------------------------
     def resolve(self, ids: np.ndarray) -> None:
@@ -413,6 +470,7 @@ class DeviceArrayCache:
         return {"array": self.array, "policy": self.policy,
                 "capacity_rows": self.capacity,
                 "pinned_rows": int(self._pinned_ids.size),
+                "resets": self.resets,
                 **self.counters()}
 
 
@@ -457,6 +515,7 @@ class DeviceFeatureCache(DeviceArrayCache):
         ``gather_rows`` sequence (a later segment's installs may evict an
         earlier segment's rows, but only after that segment's gather),
         so values, counters, and eviction outcomes are bit-identical."""
+        self.check_generation(plan)
         jnp = self._jnp
         parts = []
         for ps in plan.segments:

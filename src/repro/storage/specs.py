@@ -13,6 +13,7 @@ sensitivity of the reproduced ratios to these constants.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +95,43 @@ class DiskStoreSpec:
     policy: str = "lru"
     lock_shards: int = 8
     io_threads: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrySpec:
+    """I/O retry policy for every ``DiskStore`` block pread (including
+    the ``io_threads`` pool path): a failed attempt — OSError, short
+    read, checksum mismatch, or an attempt running past ``deadline_s`` —
+    is retried up to ``max_attempts`` total tries with exponential
+    backoff.  Jitter is *deterministic* (hashed from the read's
+    identity, not a global RNG) so two runs of the same fault schedule
+    sleep identically: timing stays reproducible along with the data."""
+    max_attempts: int = 3
+    backoff_s: float = 0.005        # sleep before the first retry
+    backoff_mult: float = 2.0       # multiplier per further retry
+    jitter: float = 0.25            # max extra backoff fraction in [0, 1]
+    deadline_s: float = 30.0        # per-attempt wall-clock budget
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"retry.max_attempts must be >= 1, "
+                             f"got {self.max_attempts!r}")
+        if self.backoff_s < 0 or self.backoff_mult < 1.0:
+            raise ValueError("retry.backoff_s must be >= 0 and "
+                             "retry.backoff_mult >= 1.0")
+        if not 0.0 <= self.jitter <= 1.0:
+            raise ValueError(f"retry.jitter must be in [0, 1], "
+                             f"got {self.jitter!r}")
+        if self.deadline_s <= 0:
+            raise ValueError(f"retry.deadline_s must be > 0, "
+                             f"got {self.deadline_s!r}")
+
+    def backoff(self, key: str, block: int, attempt: int) -> float:
+        """Sleep before retrying ``attempt`` (0-based) of one block read;
+        deterministic jitter from the read's identity."""
+        base = self.backoff_s * self.backoff_mult ** attempt
+        frac = zlib.crc32(f"{key}:{block}:{attempt}".encode()) / 2**32
+        return base * (1.0 + self.jitter * frac)
 
 
 @dataclasses.dataclass(frozen=True)

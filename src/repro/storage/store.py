@@ -35,6 +35,7 @@ import contextlib
 import json
 import os
 import threading
+import time
 import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Protocol, runtime_checkable
@@ -43,7 +44,9 @@ import numpy as np
 
 from repro.core.graph import CSRGraph
 from repro.storage.blockdev import LRUCache, select_pinned_blocks
-from repro.storage.specs import DEFAULT, SystemSpec
+from repro.storage.faults import FaultInjector, FaultSpec
+from repro.storage.integrity import block_checksums, crc32c
+from repro.storage.specs import DEFAULT, RetrySpec, SystemSpec
 
 MANIFEST = "manifest.json"
 FORMAT = "smartsage-graphstore"
@@ -136,8 +139,7 @@ class InMemoryStore:
         return self.g.gather_edge_blocks(blocks, block_e)
 
     def io_counters(self) -> dict:
-        return {"requests": 0, "block_fetches": 0, "bytes_fetched": 0,
-                "hits": 0, "misses": 0, "evictions": 0}
+        return dict.fromkeys(IOContext.KEYS, 0)
 
     def stats(self) -> dict:
         return {"kind": self.kind, **self.io_counters()}
@@ -157,8 +159,14 @@ class IOContext:
     so ``counters()`` is the exact I/O bill of the scope no matter which
     threads served it.  Thread-safe: pool workers add concurrently."""
 
+    # fault keys are flat here (and in ``io_counters``) so the existing
+    # numeric-delta plumbing (``_io_delta``, epoch deltas) keeps working;
+    # ``nest_fault_counters`` folds them into ``io["faults"]`` at trace
+    # assembly
+    FAULT_KEYS = ("retries", "io_errors", "short_reads", "corrupt_blocks",
+                  "timeouts")
     KEYS = ("requests", "block_fetches", "bytes_fetched", "hits",
-            "misses", "evictions")
+            "misses", "evictions") + FAULT_KEYS
 
     __slots__ = ("_lock", "_c")
 
@@ -166,20 +174,37 @@ class IOContext:
         self._lock = threading.Lock()
         self._c = dict.fromkeys(self.KEYS, 0)
 
-    def add(self, *, requests=0, block_fetches=0, bytes_fetched=0,
-            hits=0, misses=0, evictions=0) -> None:
+    def add(self, **deltas) -> None:
         with self._lock:
             c = self._c
-            c["requests"] += requests
-            c["block_fetches"] += block_fetches
-            c["bytes_fetched"] += bytes_fetched
-            c["hits"] += hits
-            c["misses"] += misses
-            c["evictions"] += evictions
+            for k, v in deltas.items():
+                c[k] += v
 
     def counters(self) -> dict:
         with self._lock:
             return dict(self._c)
+
+
+class StoreReadError(RuntimeError):
+    """A block read failed beyond the retry policy: every attempt errored,
+    came back short, missed its deadline, or failed checksum verification.
+    Deliberately *not* an OSError — by the time this raises, the retry
+    loop has already consumed the transient-error budget, and callers
+    (devcache bypass, pipeline degrade) treat it as a policy decision,
+    not an I/O hiccup."""
+
+
+def nest_fault_counters(io: dict | None) -> dict | None:
+    """Fold the flat fault counters of an I/O bill into ``io['faults']``
+    — the shape traces expose (``SampleTrace.io['faults']``).  Counters
+    stay flat inside the store so plain numeric-delta arithmetic works;
+    call this once at trace-assembly time."""
+    if not io:
+        return io
+    faults = {k: io.pop(k) for k in IOContext.FAULT_KEYS if k in io}
+    if faults:
+        io["faults"] = faults
+    return io
 
 
 def _pad_to_block(f, block_bytes: int) -> int:
@@ -200,7 +225,9 @@ def save_graph(g: CSRGraph, path: str, *,
     capacity-dominant edge-list array), ``features.bin`` (float32
     row-major), ``labels.bin`` (int32) — each zero-padded to a
     ``block_bytes`` boundary, plus a small JSON manifest with dtypes,
-    shapes and logical byte sizes.  Returns the manifest dict.
+    shapes, logical byte sizes, and one CRC32C per block of the padded
+    file (``block_crc32c`` — what ``DiskStore(verify=True)`` checks
+    every read against).  Returns the manifest dict.
     """
     block_bytes = block_bytes or DEFAULT.diskstore.block_bytes
     os.makedirs(path, exist_ok=True)
@@ -213,7 +240,7 @@ def save_graph(g: CSRGraph, path: str, *,
     if g.labels is not None:
         arrays["labels"] = g.labels.astype(np.int32)
     manifest = {
-        "format": FORMAT, "version": 1, "name": g.name,
+        "format": FORMAT, "version": 2, "name": g.name,
         "num_nodes": g.num_nodes, "num_edges": g.num_edges,
         "feat_dim": g.feat_dim, "block_bytes": block_bytes,
         "arrays": {},
@@ -222,12 +249,16 @@ def save_graph(g: CSRGraph, path: str, *,
         manifest["n_classes"] = int(g.labels.max()) + 1
     for key, arr in arrays.items():
         fname = f"{key}.bin"
+        raw = arr.tobytes()
+        padded = raw + b"\0" * (-len(raw) % block_bytes)
         with open(os.path.join(path, fname), "wb") as f:
-            f.write(arr.tobytes())
+            f.write(raw)
             nbytes = _pad_to_block(f, block_bytes)
         manifest["arrays"][key] = {
             "file": fname, "dtype": arr.dtype.name,
             "shape": list(arr.shape), "nbytes": nbytes,
+            "block_crc32c": [int(c)
+                             for c in block_checksums(padded, block_bytes)],
         }
     with open(os.path.join(path, MANIFEST), "w") as f:
         json.dump(manifest, f, indent=2)
@@ -271,6 +302,9 @@ class DiskStore:
                  policy: str | None = None, cache_blocks: int | None = None,
                  lock_shards: int | None = None,
                  io_threads: int | None = None,
+                 verify: bool = False,
+                 retry: RetrySpec | None = None,
+                 faults: FaultSpec | None = None,
                  spec: SystemSpec = DEFAULT):
         self.path = path
         with open(os.path.join(path, MANIFEST)) as f:
@@ -279,6 +313,27 @@ class DiskStore:
             raise ValueError(f"{path}: not a {FORMAT} directory")
         self.name = self.manifest["name"]
         self.block_bytes = int(self.manifest["block_bytes"])
+        self.verify = bool(verify)
+        self.retry = RetrySpec() if retry is None else retry
+        if faults is not None and faults.bitflip_rate > 0 and not self.verify:
+            raise ValueError(
+                "faults.bitflip_rate > 0 without verify=True would corrupt "
+                "training data silently; open the store with verify=True")
+        self._injector = (FaultInjector(faults)
+                          if faults is not None and faults.storage_active
+                          else None)
+        self._crc: dict[str, np.ndarray] | None = None
+        if self.verify:
+            missing = [k for k, a in self.manifest["arrays"].items()
+                       if "block_crc32c" not in a]
+            if missing:
+                raise ValueError(
+                    f"{path}: manifest records no block checksums for "
+                    f"{missing} — the layout predates checksum support; "
+                    "re-save it with save_graph() or open with verify=False")
+            self._crc = {k: np.asarray(a["block_crc32c"], np.uint32)
+                         for k, a in self.manifest["arrays"].items()}
+        self._fault_totals = dict.fromkeys(IOContext.FAULT_KEYS, 0)
         self.cache_mb = (spec.diskstore.cache_mb if cache_mb is None
                          else float(cache_mb))
         self.policy = policy or spec.diskstore.policy
@@ -383,9 +438,80 @@ class DiskStore:
         return (int(self.indptr[u]) * eb, int(self.indptr[u + 1]) * eb)
 
     # -- paged read path -----------------------------------------------------
-    def _fetch(self, key: str, block: int) -> bytes:
+    def _read_block_raw(self, key: str, block: int) -> bytes:
         return os.pread(self._fd[key], self.block_bytes,
                         block * self.block_bytes)
+
+    def _verify_block(self, key: str, block: int, data: bytes) -> bool:
+        if self._crc is None:
+            return True
+        return crc32c(data) == int(self._crc[key][block])
+
+    def _count_faults(self, faults: dict) -> None:
+        self._current_ctx().add(**faults)
+        with self._stat_lock:
+            for k, v in faults.items():
+                self._fault_totals[k] += v
+
+    def _fetch(self, key: str, block: int) -> bytes:
+        """One block read under the retry policy.  Every path into disk
+        funnels here — ``_read_range`` (and through it the ``io_threads``
+        pool groups and the planner warms) and the pinned preload — so
+        the policy covers the entire pread surface.  An attempt fails on
+        OSError, a short return, a checksum mismatch (``verify``), or by
+        running past ``retry.deadline_s``; failures are retried with
+        deterministic-jitter backoff up to ``retry.max_attempts`` total
+        tries, then raise ``StoreReadError``.  Fault counters bill the
+        caller's ``IOContext`` (flat keys) plus the store totals.
+        (The resident ``indptr`` load at open is the one read outside
+        this path: it fails loudly at construction, nothing to retry
+        into.)"""
+        r = self.retry
+        faults: dict[str, int] = {}
+        last: Exception | None = None
+
+        def note(kind):
+            faults[kind] = faults.get(kind, 0) + 1
+
+        for attempt in range(r.max_attempts):
+            t0 = time.perf_counter()
+            data = None
+            try:
+                if self._injector is not None:
+                    data = self._injector.read(
+                        lambda: self._read_block_raw(key, block),
+                        key, block, attempt)
+                else:
+                    data = self._read_block_raw(key, block)
+            except OSError as e:
+                last = e
+                note("io_errors")
+            if data is not None:
+                if len(data) != self.block_bytes:
+                    last = StoreReadError(
+                        f"{key} block {block}: short read "
+                        f"({len(data)}/{self.block_bytes} bytes)")
+                    note("short_reads")
+                elif not self._verify_block(key, block, data):
+                    last = StoreReadError(
+                        f"{key} block {block}: CRC32C mismatch")
+                    note("corrupt_blocks")
+                elif time.perf_counter() - t0 > r.deadline_s:
+                    last = StoreReadError(
+                        f"{key} block {block}: read exceeded the "
+                        f"{r.deadline_s}s deadline")
+                    note("timeouts")
+                else:
+                    if faults:
+                        self._count_faults(faults)
+                    return data
+            if attempt + 1 < r.max_attempts:
+                note("retries")
+                time.sleep(r.backoff(key, block, attempt))
+        self._count_faults(faults)
+        raise StoreReadError(
+            f"{key} block {block}: read failed after {r.max_attempts} "
+            f"attempt(s): {last}") from last
 
     # -- I/O attribution -----------------------------------------------------
     def make_io_context(self) -> IOContext:
@@ -712,7 +838,7 @@ class DiskStore:
                     "block_fetches": self._block_fetches,
                     "bytes_fetched": self._bytes_fetched,
                     "hits": hits + self._pinned_hits, "misses": misses,
-                    "evictions": evictions}
+                    "evictions": evictions, **self._fault_totals}
 
     def thread_io_counters(self) -> dict:
         """This thread's attribution scope: the installed ``IOContext``
@@ -730,6 +856,7 @@ class DiskStore:
                 "cache_blocks": self.cache_blocks,
                 "lock_shards": self.lock_shards,
                 "io_threads": self.io_threads,
+                "verify": self.verify,
                 "nbytes_on_disk": self.nbytes_on_disk(),
                 "planner": dict(self._planner_ctx.counters(),
                                 warmed_nodes=self._warmed_nodes),

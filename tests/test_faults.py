@@ -1,0 +1,526 @@
+"""Fault tolerance: block integrity (CRC32C), the I/O retry policy,
+deterministic fault injection, lane supervision, graceful degradation,
+and deterministic mid-epoch resume.
+
+The contract under test is the PR's acceptance bar: under injected
+*transient* faults (EIO, short reads, bit flips, stalls — all recoverable
+within the retry policy) training completes **bit-identical** to the
+fault-free run, with the faults visible only in the counters; persistent
+faults degrade gracefully (devcache bypass, sync fallback) instead of
+hanging or crashing the consumer."""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (GNNConfig, GraphSAGE, build_pipeline,
+                        build_train_step, train_loop)
+from repro.core.config import (BackendSpec, CacheTierSpec, PipelineSpec,
+                               PrefetchSpec, SamplerSpec, StoreSpec)
+from repro.core.pipeline import OverlappedLoader, ProducerConsumerPipeline
+from repro.optim import adamw
+from repro.storage import (DiskStore, FaultSpec, RetrySpec, StoreReadError,
+                           save_graph)
+from repro.storage.devcache import StaleAdmissionPlan
+from repro.storage.integrity import block_checksums, crc32c
+
+FANOUTS = (3, 2)
+BATCH = 8
+
+
+@pytest.fixture
+def store_dir(small_graph, tmp_path):
+    path = tmp_path / "store"
+    save_graph(small_graph, str(path))
+    return str(path)
+
+
+# ---------------------------------------------------------------------------
+# CRC32C: the checksum itself
+# ---------------------------------------------------------------------------
+
+def test_crc32c_check_value():
+    # the standard CRC-32C (Castagnoli) check value
+    assert crc32c(b"123456789") == 0xE3069283
+    assert crc32c(b"") == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([512, 1024, 4096]),
+       st.integers(min_value=1, max_value=4),
+       st.sampled_from(["float32", "int32", "int64", "uint8"]),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_checksum_roundtrip_property(block_bytes, n_blocks, dtype, seed):
+    """Vectorized per-block checksums == the scalar reference, for
+    arbitrary block sizes and payload dtypes; any single flipped bit in
+    any block changes exactly that block's checksum."""
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(0, 256, block_bytes * n_blocks, np.uint8)
+    buf = bytes(raw.astype(dtype, copy=False).view(np.uint8)[
+        :block_bytes * n_blocks].tobytes())
+    crcs = block_checksums(buf, block_bytes)
+    assert crcs.shape == (n_blocks,)
+    for b in range(n_blocks):
+        assert int(crcs[b]) == crc32c(
+            buf[b * block_bytes:(b + 1) * block_bytes])
+    # flip one bit in one block: only that block's checksum changes
+    victim = int(rng.integers(n_blocks))
+    pos = int(rng.integers(block_bytes))
+    flipped = bytearray(buf)
+    flipped[victim * block_bytes + pos] ^= 1 << int(rng.integers(8))
+    crcs2 = block_checksums(bytes(flipped), block_bytes)
+    assert int(crcs2[victim]) != int(crcs[victim])
+    same = [b for b in range(n_blocks) if b != victim]
+    assert all(int(crcs2[b]) == int(crcs[b]) for b in same)
+
+
+# ---------------------------------------------------------------------------
+# DiskStore: verify mode, retry policy, fault injection
+# ---------------------------------------------------------------------------
+
+def test_save_verify_roundtrip(small_graph, store_dir):
+    st_ = DiskStore(store_dir, verify=True)
+    try:
+        ids = np.arange(0, small_graph.num_nodes, 7)
+        np.testing.assert_array_equal(st_.gather_features(ids),
+                                      small_graph.gather_features(ids))
+        io = st_.io_counters()
+        assert io["corrupt_blocks"] == 0 and io["retries"] == 0
+        assert st_.stats()["verify"] is True
+    finally:
+        st_.close()
+
+
+def test_on_disk_corruption_detected(small_graph, store_dir):
+    """A real flipped byte on disk is caught by the checksum and, being
+    persistent, exhausts the retries into a StoreReadError."""
+    manifest = json.load(open(os.path.join(store_dir, "manifest.json")))
+    feat_file = os.path.join(store_dir, manifest["arrays"]["features"]["file"])
+    with open(feat_file, "r+b") as f:
+        f.seek(100)
+        b = f.read(1)
+        f.seek(100)
+        f.write(bytes([b[0] ^ 0xFF]))
+    st_ = DiskStore(store_dir, verify=True,
+                    retry=RetrySpec(max_attempts=2, backoff_s=0.0))
+    try:
+        with pytest.raises(StoreReadError, match="read failed after 2"):
+            st_.gather_features(np.arange(8))
+        assert st_.io_counters()["corrupt_blocks"] >= 2
+    finally:
+        st_.close()
+    # without verify the corruption sails through undetected — the reason
+    # bitflip injection demands verify=True
+    st_ = DiskStore(store_dir)
+    try:
+        st_.gather_features(np.arange(8))
+        assert st_.io_counters()["corrupt_blocks"] == 0
+    finally:
+        st_.close()
+
+
+def test_verify_requires_checksums_in_manifest(small_graph, store_dir):
+    mpath = os.path.join(store_dir, "manifest.json")
+    manifest = json.load(open(mpath))
+    for a in manifest["arrays"].values():
+        a.pop("block_crc32c", None)
+    json.dump(manifest, open(mpath, "w"))
+    with pytest.raises(ValueError, match="save_graph"):
+        DiskStore(store_dir, verify=True)
+    DiskStore(store_dir).close()        # verify=False still opens it
+
+
+def test_transient_fault_mix_is_bit_identical(small_graph, store_dir):
+    """Every injected failure class at once — transient, so one retry
+    always recovers: the gathered bytes match the clean store exactly
+    and the faults appear only in the counters."""
+    clean = DiskStore(store_dir)
+    faulty = DiskStore(
+        store_dir, verify=True,
+        retry=RetrySpec(max_attempts=3, backoff_s=0.0005),
+        faults=FaultSpec(seed=3, eio_rate=0.2, short_read_rate=0.1,
+                         bitflip_rate=0.1, stall_rate=0.02, stall_s=0.01))
+    try:
+        ids = np.arange(0, small_graph.num_nodes, 3)
+        np.testing.assert_array_equal(faulty.gather_features(ids),
+                                      clean.gather_features(ids))
+        np.testing.assert_array_equal(faulty.neighbors(5), clean.neighbors(5))
+        io = faulty.io_counters()
+        assert io["retries"] > 0
+        assert io["io_errors"] > 0
+        assert io["corrupt_blocks"] > 0
+        assert io["short_reads"] > 0
+        assert clean.io_counters()["retries"] == 0
+    finally:
+        clean.close()
+        faulty.close()
+
+
+def test_persistent_fault_exhausts_retries(small_graph, store_dir):
+    st_ = DiskStore(store_dir,
+                    retry=RetrySpec(max_attempts=2, backoff_s=0.0),
+                    faults=FaultSpec(seed=0, eio_rate=1.0, persist=True))
+    try:
+        with pytest.raises(StoreReadError, match="read failed after 2"):
+            st_.gather_features(np.arange(4))
+        io = st_.io_counters()
+        assert io["io_errors"] >= 2 and io["retries"] >= 1
+    finally:
+        st_.close()
+
+
+def test_deadline_overrun_counts_timeouts(small_graph, store_dir):
+    """A stalled pread that blows the per-attempt deadline is treated as
+    a failed attempt (timeouts counter) and retried — transient stalls
+    never change the data."""
+    clean = DiskStore(store_dir)
+    st_ = DiskStore(store_dir,
+                    retry=RetrySpec(max_attempts=3, backoff_s=0.0,
+                                    deadline_s=0.005),
+                    faults=FaultSpec(seed=1, stall_rate=1.0, stall_s=0.02))
+    try:
+        ids = np.arange(4)
+        np.testing.assert_array_equal(st_.gather_features(ids),
+                                      clean.gather_features(ids))
+        assert st_.io_counters()["timeouts"] > 0
+    finally:
+        st_.close()
+        clean.close()
+
+
+def test_bitflip_injection_requires_verify(store_dir):
+    with pytest.raises(ValueError, match="verify"):
+        DiskStore(store_dir, faults=FaultSpec(bitflip_rate=0.1))
+    with pytest.raises(ValueError, match="verify"):
+        StoreSpec(kind="disk", faults=FaultSpec(bitflip_rate=0.1))
+
+
+# ---------------------------------------------------------------------------
+# pipeline supervision: prompt error propagation, watchdog, degrade
+# ---------------------------------------------------------------------------
+
+def test_producer_pipeline_error_propagates_promptly():
+    """A producer thread dying must raise at the consumer within a tick,
+    not leave get_batch blocked until its 30 s timeout."""
+    def boom(idx):
+        if idx == 2:
+            raise RuntimeError("producer died")
+        return idx
+    p = ProducerConsumerPipeline(boom, n_workers=2, queue_depth=4)
+    try:
+        assert p.get_batch(0) == 0 and p.get_batch(1) == 1
+        t0 = time.perf_counter()
+        with pytest.raises(RuntimeError, match="producer died"):
+            p.get_batch(2)
+        assert time.perf_counter() - t0 < 2.0
+    finally:
+        p.close()
+
+
+class _Staged:
+    """Staged-loader double with a scriptable source stage."""
+
+    backend = "staged"
+    fanouts = FANOUTS
+
+    def __init__(self, fail_at=None, hang_at=None, hang_s=3.0):
+        self.fail_at, self.hang_at, self.hang_s = fail_at, hang_at, hang_s
+        self.hung = False
+
+    def pipeline_stages(self):
+        return [("sample", self._sample), ("emit", self._emit)]
+
+    def _sample(self, idx):
+        if idx == self.fail_at:
+            raise ValueError(f"lane dies at {idx}")
+        if idx == self.hang_at and not self.hung:
+            self.hung = True
+            time.sleep(self.hang_s)
+        return {"idx": idx}
+
+    def _emit(self, s):
+        return dict(s, val=s["idx"] * 2)
+
+    def get_batch(self, idx):
+        return self._emit(self._sample(idx))
+
+    def stats(self):
+        return {"backend": self.backend}
+
+    def close(self):
+        pass
+
+
+def test_overlap_lane_exception_propagates_promptly():
+    inner = _Staged(fail_at=3)
+    ov = OverlappedLoader(inner, depth=2, stage_depth=2, lane_timeout=10.0)
+    try:
+        for i in range(3):
+            assert ov.get_batch(i)["val"] == 2 * i
+        t0 = time.perf_counter()
+        with pytest.raises(ValueError, match="lane dies at 3"):
+            ov.get_batch(3)
+        assert time.perf_counter() - t0 < 5.0
+        # the loader recovers: clear the fault, replay deterministically
+        inner.fail_at = None
+        assert ov.get_batch(4)["val"] == 8
+        assert ov.stats()["lane_failures"] == 1
+    finally:
+        ov.close()
+
+
+def test_overlap_stall_watchdog_restarts_lane():
+    """A lane stuck inside a stage past lane_timeout trips the heartbeat
+    watchdog: the lanes restart and replay deterministically."""
+    inner = _Staged(hang_at=2, hang_s=3.0)
+    ov = OverlappedLoader(inner, depth=2, stage_depth=2, lane_timeout=0.3,
+                          max_lane_restarts=3)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            for i in range(5):
+                assert ov.get_batch(i, timeout=20.0)["val"] == 2 * i
+        s = ov.stats()
+        assert s["lane_stall_restarts"] >= 1
+        assert not s["degraded"]
+    finally:
+        ov.close()
+
+
+def test_overlap_degrades_to_sync_past_restart_budget():
+    """A *persistently* stuck stage exhausts max_lane_restarts; the
+    loader degrades permanently to synchronous composition and keeps
+    delivering correct batches."""
+    class _AlwaysHangs(_Staged):
+        def _emit(self, s):
+            # hang only on lane threads; the sync fallback path (consumer
+            # thread) must keep working
+            if threading.current_thread().name.startswith("overlap-"):
+                time.sleep(60)
+            return dict(s, val=s["idx"] * 2)
+
+    ov = OverlappedLoader(_AlwaysHangs(), depth=2, stage_depth=2,
+                          lane_timeout=0.3, max_lane_restarts=1)
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            for i in range(4):
+                assert ov.get_batch(i, timeout=20.0)["val"] == 2 * i
+        assert any("degrading permanently" in str(x.message) for x in w)
+        s = ov.stats()
+        assert s["degraded"]
+        assert s["lane_stall_restarts"] >= 2
+    finally:
+        ov.close()
+
+
+def test_overlap_stall_inject_fires_once():
+    ov = OverlappedLoader(_Staged(), depth=2, stage_depth=2,
+                          lane_timeout=0.3, max_lane_restarts=3,
+                          stall_inject=(2, 1.2))
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            for i in range(5):
+                assert ov.get_batch(i, timeout=20.0)["val"] == 2 * i
+        s = ov.stats()
+        assert s["lane_stall_restarts"] == 1     # one-shot, replay clean
+        assert not s["degraded"]
+    finally:
+        ov.close()
+
+
+# ---------------------------------------------------------------------------
+# the full data plane under injected faults: sync and overlapped
+# ---------------------------------------------------------------------------
+
+def _pallas_spec(store_dir, *, faults=None, overlap=False):
+    tiers = [CacheTierSpec(tier="host", capacity_mb=2.0, arrays=()),
+             CacheTierSpec.device(rows=48, policy="lru")]
+    return PipelineSpec(
+        backend=BackendSpec(name="pallas"),
+        sampler=SamplerSpec(fanouts=FANOUTS),
+        store=StoreSpec(kind="disk", path=store_dir, io_threads=2,
+                        verify=faults is not None,
+                        retry=RetrySpec(max_attempts=3, backoff_s=0.0005),
+                        faults=faults),
+        cache_tiers=tuple(tiers),
+        prefetch=(PrefetchSpec(depth=2, overlap=True, stage_depth=2,
+                               lane_timeout_s=10.0)
+                  if overlap else PrefetchSpec()),
+        batch_size=BATCH, seed=0)
+
+
+FAULT_MIX = FaultSpec(seed=11, eio_rate=0.15, short_read_rate=0.05,
+                      bitflip_rate=0.05, stall_rate=0.01, stall_s=0.005)
+
+
+@pytest.mark.parametrize("overlap", [False, True],
+                         ids=["sync", "overlapped"])
+def test_loader_bit_identical_under_faults(small_graph, store_dir, overlap):
+    """The acceptance bar: the out-of-core pallas data plane (disk store
+    + device feature cache) under the full transient fault mix produces
+    bit-identical batches to the fault-free run, under both the sync and
+    the overlapped composition, with per-batch fault counters riding in
+    ``trace.io['faults']``."""
+    clean = build_pipeline(_pallas_spec(store_dir), small_graph)
+    faulty = build_pipeline(_pallas_spec(store_dir, faults=FAULT_MIX,
+                                         overlap=overlap), small_graph)
+    try:
+        total = dict.fromkeys(("retries", "io_errors", "corrupt_blocks",
+                               "short_reads", "timeouts"), 0)
+        for i in range(4):
+            a, b = clean.get_batch(i), faulty.get_batch(i)
+            for ha, hb in zip(a.hop_feats, b.hop_feats):
+                np.testing.assert_array_equal(np.asarray(ha),
+                                              np.asarray(hb))
+            np.testing.assert_array_equal(np.asarray(a.labels),
+                                          np.asarray(b.labels))
+            fb = b.trace.io.get("faults")
+            assert fb is not None, b.trace.io
+            for k in total:
+                total[k] += fb[k]
+        assert total["retries"] > 0 and total["io_errors"] > 0, total
+    finally:
+        clean.close()
+        faulty.close()
+
+
+def test_devcache_bypass_on_persistent_failure(small_graph, store_dir):
+    """A feature-cache fetch failing past the retry policy trips the
+    one-strike bypass: training continues through direct store gathers,
+    bit-identical, with the bypass visible in stats and the trace."""
+    clean = build_pipeline(_pallas_spec(store_dir), small_graph)
+    broken = build_pipeline(_pallas_spec(store_dir), small_graph)
+    try:
+        loader = broken.loader
+        def dead_fetch(plan):
+            raise StoreReadError("injected persistent failure")
+        loader.devcache.fetch_plan = dead_fetch
+        with pytest.warns(UserWarning, match="bypassing the cache"):
+            mb = broken.get_batch(0)
+        ref = clean.get_batch(0)
+        for ha, hb in zip(ref.hop_feats, mb.hop_feats):
+            np.testing.assert_array_equal(np.asarray(ha), np.asarray(hb))
+        assert mb.trace.io.get("devcache_bypass") is True
+        s = broken.stats()
+        assert s["devcache_bypass"] and s["devcache_bypass_events"] == 1
+        # later batches keep flowing through the bypass, still identical
+        ref1, got1 = clean.get_batch(1), broken.get_batch(1)
+        for ha, hb in zip(ref1.hop_feats, got1.hop_feats):
+            np.testing.assert_array_equal(np.asarray(ha), np.asarray(hb))
+    finally:
+        clean.close()
+        broken.close()
+
+
+def test_devcache_reset_invalidates_inflight_plans(small_graph):
+    """reset() clears the host mirror AND fences in-flight plans: a plan
+    made before the reset must refuse to install (its reserved slots no
+    longer exist) instead of corrupting the rebuilt cache."""
+    from repro.storage.devcache import DeviceFeatureCache
+    dc = DeviceFeatureCache(small_graph, rows=32, policy="lru")
+    plan = dc.plan_rows(np.arange(16))
+    dc.fetch_plan(plan)
+    dc.reset()
+    with pytest.raises(StaleAdmissionPlan):
+        dc.execute_plan(plan)
+    assert dc.stats()["resets"] == 1
+    # a fresh post-reset plan serves correct rows
+    rows = dc.gather_rows(np.arange(8))
+    np.testing.assert_array_equal(
+        np.asarray(rows), small_graph.features[np.arange(8)])
+
+
+# ---------------------------------------------------------------------------
+# deterministic mid-epoch resume
+# ---------------------------------------------------------------------------
+
+def _train(pipe, g, *, steps, start=0, state=None, losses=None):
+    gnn = GraphSAGE(GNNConfig(feat_dim=g.feat_dim, hidden=16,
+                              n_classes=int(g.labels.max()) + 1,
+                              fanouts=FANOUTS))
+    opt = adamw(3e-3)
+    step = build_train_step(pipe, gnn, opt)
+    if state is None:
+        p = gnn.init(jax.random.key(0))
+        state = {"params": p, "opt": opt.init(p),
+                 "step": jnp.zeros((), jnp.int32)}
+    losses = [] if losses is None else losses
+    state, _ = train_loop(pipe, step, state, steps=steps, start=start,
+                          on_step=lambda i, s, m: losses.append(
+                              repr(float(m["loss"]))))
+    return state, losses
+
+
+def test_mid_epoch_resume_bit_identical(small_graph, store_dir, tmp_path):
+    """Kill at step 4 of 8, checkpoint, restore, fast-forward the batch
+    cursor: the resumed trajectory is bit-identical to the uninterrupted
+    one (batches are pure functions of the step index, params/opt state
+    round-trip exactly through the checkpoint)."""
+    from repro import checkpoint as ckpt
+    spec = _pallas_spec(store_dir)
+    with build_pipeline(spec, small_graph) as pipe:
+        _, full = _train(pipe, small_graph, steps=8)
+    with build_pipeline(spec, small_graph) as pipe:
+        state, first = _train(pipe, small_graph, steps=4)
+        ckpt.save(str(tmp_path / "ck"), 4, state,
+                  manifest_extra={"pipeline_spec": spec.to_dict()})
+    # "crash" — fresh process state: new pipeline, state from the ckpt
+    manifest = ckpt.read_manifest(str(tmp_path / "ck"))
+    respec = PipelineSpec.from_dict(manifest["pipeline_spec"])
+    assert respec == spec               # the data plane rides the manifest
+    state2, step0 = ckpt.restore(str(tmp_path / "ck"))
+    assert step0 == 4
+    with build_pipeline(respec, small_graph) as pipe:
+        _, resumed = _train(pipe, small_graph, steps=8, start=4,
+                            state=state2, losses=list(first))
+    assert resumed == full              # repr-exact, every step
+
+
+def test_train_cli_resume(tmp_path):
+    """launch/train.py --resume: a killed run resumed from its checkpoint
+    reproduces the uninterrupted run's logged losses exactly, and errors
+    loudly when there is nothing to resume from."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+
+    def run(args, expect_fail=False):
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train", "--arch",
+             "graphsage", "--dataset", "reddit", "--batch", "8",
+             "--fanouts", "3,2", "--hidden", "16", "--log-every", "2",
+             "--ckpt-every", "4"] + args,
+            capture_output=True, text=True, env=env, cwd="/root/repo",
+            timeout=900)
+        if expect_fail:
+            assert r.returncode != 0, r.stdout[-2000:]
+        else:
+            assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+        return r.stdout + r.stderr
+
+    def losses(out):
+        return [line.split("loss=")[1].split()[0]
+                for line in out.splitlines() if "loss=" in line]
+
+    out = run(["--resume", "--ckpt-dir", str(tmp_path / "empty")],
+              expect_fail=True)
+    assert "no checkpoints" in out
+    full = run(["--steps", "8", "--ckpt-dir", str(tmp_path / "a")])
+    run(["--steps", "4", "--ckpt-dir", str(tmp_path / "b")])
+    resumed = run(["--steps", "8", "--resume",
+                   "--ckpt-dir", str(tmp_path / "b")])
+    assert "resumed from step 4" in resumed
+    assert losses(resumed) == losses(full)[2:]   # steps 5..8 logged at 2
