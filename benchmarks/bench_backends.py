@@ -169,6 +169,187 @@ def admission_bench(sizes=(10_000, 30_000, 100_000), *, rows: int = 32_768,
     return out
 
 
+def _host_tier_counters(store_dir: str, policy: str, cap_mb: float, *,
+                        steps: int, batch: int, fanouts, seed: int,
+                        window: int) -> dict:
+    """Exact page-cache counters for one host-tier sweep point: a
+    single-threaded replay of the host producer's access pattern
+    (sample + per-hop feature gathers + labels), so the lru/pinned/
+    optimal comparison is deterministic — no producer-lookahead fuzz."""
+    import numpy as np
+
+    from repro.core import batch_targets, sample_khop
+    from repro.storage import DiskStore
+
+    store = DiskStore(store_dir, cache_mb=cap_mb, policy=policy)
+    try:
+        if policy == "optimal":
+            from repro.storage.oracle import OracleReplayer, RawDiskReader
+            raw = RawDiskReader(store)
+
+            def replay(idx):
+                t = batch_targets(store, idx, batch, seed)
+                tr = sample_khop(raw, t, fanouts, seed=seed + idx)
+                return {"pages": store.replay_block_ids(
+                    feature_nodes=tr.subgraph_nodes,
+                    edge_nodes=np.unique(tr.touched_nodes),
+                    label_nodes=t)}
+
+            store.oracle_attach(OracleReplayer(
+                replay, {"pages": store.oracle_feed}, window=window,
+                name="sweep"))
+        for i in range(steps):
+            store.oracle_advance(i)
+            targets = batch_targets(store, i, batch, seed)
+            trace = sample_khop(store, targets, fanouts, seed=seed + i)
+            for h in trace.hops:
+                store.gather_features(h)
+            store.gather_labels(targets)
+        io = store.io_counters()
+    finally:
+        store.close()
+    return io
+
+
+def policy_sweep(args, g, mesh, rules, store_dir: str) -> dict:
+    """The headline curves: hit rate and steps/s vs cache capacity for
+    lru / pinned / optimal, on both cache tiers.
+
+    * host tier: the DiskStore page cache under the host backend's
+      access pattern, swept over ``--sweep-cache-mb``.  Hit rates come
+      from a deterministic single-threaded counter replay
+      (``_host_tier_counters``); steps/s from a live training run.
+    * device tier: the HBM feature cache under disk-backed pallas,
+      swept over ``--sweep-device-rows``; the sync cached path is
+      deterministic, so one training run yields both.
+
+    ``optimal`` is the Belady ceiling computed by sampler replay
+    (storage/oracle.py); the sweep records per-point ``miss_le_lru``
+    and per-capacity loss bit-identity so regressions are visible in
+    the JSON, not just the curves."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (GNNConfig, GraphSAGE, build_pipeline,
+                            build_train_step, train_loop)
+    from repro.core.config import (BackendSpec, CacheTierSpec, PipelineSpec,
+                                   SamplerSpec, StoreSpec)
+    from repro.optim import adamw
+
+    policies = ("lru", "pinned", "optimal")
+    host_caps = [float(x) for x in args.sweep_cache_mb.split(",")]
+    dev_caps = [int(x) for x in args.sweep_device_rows.split(",")]
+    w_host = args.cache_oracle_window or 8
+    w_dev = args.device_cache_oracle_window or 8
+    gnn = GraphSAGE(GNNConfig(feat_dim=g.feat_dim, hidden=args.hidden,
+                              n_classes=int(g.labels.max()) + 1,
+                              fanouts=args.fanouts))
+    opt = adamw(1e-3)
+
+    def train_point(spec, counter_key):
+        pipe = build_pipeline(spec, g, mesh=mesh)
+        try:
+            step = build_train_step(pipe, gnn, opt, mesh, rules)
+            p = gnn.init(jax.random.key(0))
+            state = {"params": p, "opt": opt.init(p),
+                     "step": jnp.zeros((), jnp.int32)}
+            losses = []
+            track = lambda i, s, m: losses.append(float(m["loss"]))  # noqa: E731
+            with mesh:
+                state, _ = train_loop(pipe, step, state, steps=args.warmup)
+                pipe.start_epoch()
+                state, stats = train_loop(pipe, step, state,
+                                          steps=args.warmup + args.steps,
+                                          start=args.warmup, on_step=track)
+            ls = pipe.stats()
+        finally:
+            pipe.close()
+        c = ls.get(counter_key) or {}
+        return (dict(hits=int(c.get("hits", 0)),
+                     misses=int(c.get("misses", 0)),
+                     evictions=int(c.get("evictions", 0))),
+                stats.steps_per_s, repr(losses[-1]))
+
+    rows = []
+    for cap in host_caps:
+        for policy in policies:
+            io = _host_tier_counters(
+                store_dir, policy, cap, steps=args.warmup + args.steps,
+                batch=args.batch, fanouts=args.fanouts, seed=args.seed,
+                window=w_host)
+            spec = PipelineSpec(
+                backend=BackendSpec(name="host", n_workers=1,
+                                    queue_depth=2),
+                sampler=SamplerSpec(family="khop", fanouts=args.fanouts,
+                                    walk_length=args.walk_length),
+                store=StoreSpec(kind="disk", path=store_dir),
+                cache_tiers=(CacheTierSpec(
+                    tier="host", policy=policy, capacity_mb=cap, arrays=(),
+                    oracle_window=w_host if policy == "optimal" else 0),),
+                batch_size=args.batch, seed=args.seed)
+            _, sps, loss = train_point(spec, "store_epoch")
+            hits, misses = int(io["hits"]), int(io["misses"])
+            rows.append(dict(
+                tier="host", policy=policy, capacity_mb=cap,
+                hits=hits, misses=misses,
+                evictions=int(io["evictions"]),
+                hit_rate=hits / max(1, hits + misses),
+                steps_per_s=sps, final_loss=loss))
+    for rcap in dev_caps:
+        for policy in policies:
+            spec = PipelineSpec(
+                backend=BackendSpec(name="pallas"),
+                sampler=SamplerSpec(family="khop", fanouts=args.fanouts,
+                                    walk_length=args.walk_length),
+                store=StoreSpec(kind="disk", path=store_dir),
+                cache_tiers=(
+                    CacheTierSpec(tier="host", policy="lru",
+                                  capacity_mb=args.cache_mb, arrays=()),
+                    CacheTierSpec.device(
+                        rows=rcap, policy=policy,
+                        pinned_fraction=args.device_cache_pinned_fraction,
+                        oracle_window=w_dev if policy == "optimal" else 0)),
+                batch_size=args.batch, seed=args.seed)
+            c, sps, loss = train_point(spec, "devcache_epoch")
+            rows.append(dict(
+                tier="device", policy=policy, capacity_rows=rcap,
+                hits=c["hits"], misses=c["misses"],
+                evictions=c["evictions"],
+                hit_rate=c["hits"] / max(1, c["hits"] + c["misses"]),
+                steps_per_s=sps, final_loss=loss))
+
+    # per-point checks: Belady must dominate LRU, and policy must never
+    # change training values (bit-identical final loss per configuration)
+    by_point = {}
+    for r in rows:
+        cap = r.get("capacity_mb", r.get("capacity_rows"))
+        by_point.setdefault((r["tier"], cap), {})[r["policy"]] = r
+    all_le, all_bit = True, True
+    for (tier, cap), per in by_point.items():
+        le = per["optimal"]["misses"] <= per["lru"]["misses"]
+        bit = len({per[p]["final_loss"] for p in policies}) == 1
+        per["optimal"]["miss_le_lru"] = le
+        for p in policies:
+            per[p]["loss_bit_identical"] = bit
+        all_le &= le
+        all_bit &= bit
+        cap_s = f"{cap}mb" if tier == "host" else f"{cap}rows"
+        for p in policies:
+            r = per[p]
+            print(f"bench_backends,policy_sweep,{tier},{cap_s},{p},"
+                  f"hit_rate,{r['hit_rate']:.4g},misses,{r['misses']},"
+                  f"steps_per_s,{r['steps_per_s']:.4g}")
+        if not le:
+            print(f"bench_backends,policy_sweep,{tier},{cap_s},"
+                  f"WARNING,optimal_misses_gt_lru,"
+                  f"{per['optimal']['misses']},{per['lru']['misses']}")
+    return {"policies": list(policies), "host_capacities_mb": host_caps,
+            "device_capacities_rows": dev_caps,
+            "oracle_window": {"host": w_host, "device": w_dev},
+            "optimal_miss_le_lru": all_le,
+            "loss_bit_identical": all_bit, "rows": rows}
+
+
 def _row_name(spec) -> str:
     """Result-row key encoding a spec's configuration, e.g.
     ``pallas@disk+devcache+edgecache``."""
@@ -178,6 +359,8 @@ def _row_name(spec) -> str:
         suffix.append("devcache")
     if dev is not None and "topology" in dev.arrays:
         suffix.append("edgecache")
+    if any(t.policy == "optimal" for t in spec.cache_tiers):
+        suffix.append("optimal")
     if spec.sampler.family != "khop":
         suffix.append(spec.sampler.family)
     if spec.prefetch.overlap:
@@ -223,6 +406,17 @@ def main(argv=None):
                     help="1 = also bench an overlapped-pipeline twin of "
                          "every out-of-core row (disk store or device "
                          "cache), so sync and overlapped land side by side")
+    ap.add_argument("--policy-sweep", action="store_true",
+                    help="sweep lru/pinned/optimal across cache capacities "
+                         "on both tiers: hit-rate + steps/s curves with "
+                         "the Belady 'optimal' policy as the offline "
+                         "ceiling (payload key 'policy_sweep')")
+    ap.add_argument("--sweep-cache-mb", default="0.5,1.0,2.0",
+                    help="policy sweep: host-tier page-cache capacities "
+                         "in MB (comma list)")
+    ap.add_argument("--sweep-device-rows", default="256,512,768",
+                    help="policy sweep: device-tier feature-cache "
+                         "capacities in rows (comma list)")
     ap.add_argument("--out", default="BENCH_backends.json")
     args = ap.parse_args(argv)
     # the bench assembles per-row specs from flag values directly, so
@@ -258,13 +452,15 @@ def main(argv=None):
         if kind == "disk":
             tiers.append(CacheTierSpec(
                 tier="host", policy=args.cache_policy,
-                capacity_mb=args.cache_mb, arrays=()))
+                capacity_mb=args.cache_mb, arrays=(),
+                oracle_window=args.cache_oracle_window))
         if with_devcache:
             tiers.append(CacheTierSpec.device(
                 rows=args.device_cache_rows,
                 edge_blocks=args.edge_cache_blocks,
                 policy=args.device_cache_policy,
-                pinned_fraction=args.device_cache_pinned_fraction))
+                pinned_fraction=args.device_cache_pinned_fraction,
+                oracle_window=args.device_cache_oracle_window))
         return PipelineSpec(
             backend=BackendSpec(name=backend),
             sampler=SamplerSpec(family=args.sampler, fanouts=args.fanouts,
@@ -336,7 +532,8 @@ def main(argv=None):
 
     store_dir = None
     needs_disk = (any(s.store.kind == "disk" and s.store.path is None
-                      for s in specs) or args.contention_workers)
+                      for s in specs) or args.contention_workers
+                  or args.policy_sweep)
     if needs_disk:
         import atexit
         import shutil
@@ -388,6 +585,9 @@ def main(argv=None):
             # repr round-trips the float64 exactly: the overlapped-vs-sync
             # bit-identity gate in CI compares these strings
             "final_loss": repr(losses[-1]) if losses else None,
+            # per-row store kind, so tooling can filter rows without
+            # string-splitting the legacy top-level comma list
+            "graph_store": spec.store.kind,
             "loader_stats": loader_stats,
             # the exact configuration that produced this row, verbatim
             "spec": spec.to_dict(),
@@ -441,6 +641,10 @@ def main(argv=None):
     if args.admission_bench:
         admission = admission_bench()
 
+    sweep = None
+    if args.policy_sweep:
+        sweep = policy_sweep(args, g, mesh, rules, store_dir)
+
     # sampler-family block-request locality (khop vs saint comparison);
     # loop-invariant, so computed once for the whole run
     locality = sampler_locality(g, args.sampler, steps=min(args.steps, 4),
@@ -460,7 +664,9 @@ def main(argv=None):
         "hidden": args.hidden,
         "prefetch": args.prefetch,
         "sampler": args.sampler,
-        "graph_store": args.graph_store,
+        # store kinds actually benched (per-row detail lives in each
+        # result's own "graph_store" field)
+        "graph_store": sorted({s.store.kind for s in specs}),
         "cache_mb": args.cache_mb,
         "device_cache_rows": args.device_cache_rows,
         "edge_cache_blocks": args.edge_cache_blocks,
@@ -473,6 +679,8 @@ def main(argv=None):
         payload["contention"] = contention
     if admission is not None:
         payload["devcache_admission"] = admission
+    if sweep is not None:
+        payload["policy_sweep"] = sweep
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {args.out}")

@@ -44,7 +44,7 @@ from repro.storage.specs import DEFAULT, RetrySpec
 BACKENDS = ("host", "isp", "pallas")
 SAMPLERS = ("khop", "saint")
 STORE_KINDS = ("mem", "disk")
-CACHE_POLICIES = ("lru", "pinned")
+CACHE_POLICIES = ("lru", "pinned", "optimal")
 CACHE_TIERS = ("host", "device")
 DEVICE_ARRAYS = ("features", "topology")
 ENGINES = ("none", "dram", "pmem", "mmap", "directio", "isp", "isp_oracle",
@@ -175,9 +175,12 @@ class CacheTierSpec:
       edge-block cache fed to the ``neighbor_sample_cached`` kernel), so
       sampling and gathering can both run beyond HBM capacity.
 
-    ``policy`` is shared machinery across tiers: ``'lru'`` recency or
+    ``policy`` is shared machinery across tiers: ``'lru'`` recency,
     ``'pinned'`` (hottest-by-degree set staged permanently,
-    ``pinned_fraction`` of the capacity, LRU for the rest)."""
+    ``pinned_fraction`` of the capacity, LRU for the rest), or
+    ``'optimal'`` — Belady eviction from a sampler replay lane running
+    ``oracle_window`` batches ahead (``storage/oracle.py``); the
+    offline-computable ceiling the online policies are judged against."""
 
     tier: str = "device"
     policy: str = "lru"
@@ -186,6 +189,7 @@ class CacheTierSpec:
     edge_blocks: int = 0                    # device tier: topology blocks
     pinned_fraction: float = 0.5
     arrays: tuple[str, ...] = ("features",)
+    oracle_window: int = 0                  # replay window W (optimal only)
 
     def __post_init__(self):
         _check(self.tier, "cache tier", CACHE_TIERS)
@@ -193,6 +197,18 @@ class CacheTierSpec:
         object.__setattr__(self, "arrays", tuple(self.arrays))
         if not 0.0 <= self.pinned_fraction <= 1.0:
             raise ValueError("cache pinned_fraction must be in [0, 1]")
+        if self.oracle_window < 0:
+            raise ValueError("cache oracle_window must be >= 0")
+        if self.policy == "optimal" and self.oracle_window < 1:
+            raise ValueError(
+                "policy 'optimal' needs oracle_window >= 1 (the Belady "
+                "schedule is computed by replaying that many batches "
+                "ahead)")
+        if self.policy != "optimal" and self.oracle_window:
+            raise ValueError(
+                f"oracle_window applies to policy 'optimal' only (got "
+                f"policy={self.policy!r}, oracle_window="
+                f"{self.oracle_window})")
         if self.tier == "device":
             unknown = set(self.arrays) - set(DEVICE_ARRAYS)
             if unknown or not self.arrays:
@@ -217,15 +233,16 @@ class CacheTierSpec:
 
     @classmethod
     def device(cls, *, rows: int = 0, edge_blocks: int = 0,
-               policy: str = "lru",
-               pinned_fraction: float = 0.5) -> "CacheTierSpec":
+               policy: str = "lru", pinned_fraction: float = 0.5,
+               oracle_window: int = 0) -> "CacheTierSpec":
         """Device tier with ``arrays`` derived from the capacities — the
         one place the rows/edge_blocks <-> arrays rule lives."""
         arrays = (("features",) if rows else ()) + \
             (("topology",) if edge_blocks else ())
         return cls(tier="device", policy=policy, rows=int(rows),
                    edge_blocks=int(edge_blocks),
-                   pinned_fraction=pinned_fraction, arrays=arrays)
+                   pinned_fraction=pinned_fraction, arrays=arrays,
+                   oracle_window=int(oracle_window))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -689,8 +706,13 @@ FLAG_TABLE = {
              "the beyond-DRAM working set)")),
     "--cache-policy": ("cache.policy", dict(
         choices=CACHE_POLICIES,
-        help="host tier placement: OS-page-cache-style LRU or hot-block "
-             "pinning + LRU spill")),
+        help="host tier placement: OS-page-cache-style LRU, hot-block "
+             "pinning + LRU spill, or Belady-optimal from sampler "
+             "replay")),
+    "--cache-oracle-window": ("cache.oracle_window", dict(
+        type=int,
+        help="host tier, policy 'optimal': superbatch replay window in "
+             "batches (the Belady schedule's lookahead)")),
     "--device-cache-rows": ("devcache.rows", dict(
         type=int,
         help="device tier (pallas): HBM feature-cache capacity in rows "
@@ -702,8 +724,12 @@ FLAG_TABLE = {
              "with it the sampling kernel too runs beyond HBM")),
     "--device-cache-policy": ("devcache.policy", dict(
         choices=CACHE_POLICIES,
-        help="device tier placement: LRU recency or degree-pinned hot "
-             "set + LRU spill")),
+        help="device tier placement: LRU recency, degree-pinned hot "
+             "set + LRU spill, or Belady-optimal from sampler replay")),
+    "--device-cache-oracle-window": ("devcache.oracle_window", dict(
+        type=int,
+        help="device tier, policy 'optimal': superbatch replay window "
+             "in batches")),
     "--device-cache-pinned-fraction": ("devcache.pinned_fraction", dict(
         type=float,
         help="device tier: fraction of the capacity staged permanently "
@@ -726,12 +752,13 @@ def _spec_defaults() -> dict:
         # tier yet", which the real constructor (rightly) rejects
         d["cache"] = dict(tier="host", policy=DEFAULT.diskstore.policy,
                           capacity_mb=None, rows=0, edge_blocks=0,
-                          pinned_fraction=0.5, arrays=())
+                          pinned_fraction=0.5, arrays=(),
+                          oracle_window=0)
         d["devcache"] = dict(
             tier="device", policy=DEFAULT.devcache.policy, capacity_mb=None,
             rows=0, edge_blocks=0,
             pinned_fraction=DEFAULT.devcache.pinned_fraction,
-            arrays=("features",))
+            arrays=("features",), oracle_window=0)
         # faults is None in the canonical spec; the flag paths need a
         # scratch dict to write through (all-zero normalizes back to None)
         d["store"]["faults"] = dataclasses.asdict(FaultSpec())
@@ -852,6 +879,7 @@ def spec_from_args(args) -> PipelineSpec:
     if rows or edge_blocks:
         tiers.append(CacheTierSpec.device(
             rows=rows, edge_blocks=edge_blocks, policy=devcache["policy"],
-            pinned_fraction=devcache["pinned_fraction"]))
+            pinned_fraction=devcache["pinned_fraction"],
+            oracle_window=int(devcache.get("oracle_window") or 0)))
     tree["cache_tiers"] = tiers
     return PipelineSpec.from_dict(tree)

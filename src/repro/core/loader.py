@@ -155,7 +155,8 @@ def make_loader(name: str, g: CSRGraph | None, *, batch_size: int = 64,
             rows=getattr(device_cache, "rows", 0),
             edge_blocks=getattr(device_cache, "edge_blocks", 0),
             policy=device_cache.policy,
-            pinned_fraction=device_cache.pinned_fraction))
+            pinned_fraction=device_cache.pinned_fraction,
+            oracle_window=getattr(device_cache, "oracle_window", 0)))
     spec = PipelineSpec(
         backend=BackendSpec(name=name, **backend_kw),
         sampler=SamplerSpec(family=sampler, fanouts=tuple(fanouts),
@@ -216,14 +217,23 @@ def _build_loader(spec: PipelineSpec, *, g: CSRGraph | None, store=None,
                            seed=spec.seed, sampler=spec.sampler.family,
                            walk_length=spec.sampler.walk_length,
                            storage_engine=storage_engine, store=store, **kw)
+    if any(t.policy == "optimal" for t in spec.cache_tiers):
+        from repro.storage.oracle import (attach_host_oracle,
+                                          attach_pallas_oracle)
+        if name == "pallas":
+            attach_pallas_oracle(loader, spec)
+        elif name == "host":
+            attach_host_oracle(loader, spec)
     if spec.prefetch.depth:
         if spec.prefetch.overlap:
             from repro.core.pipeline import OverlappedLoader
+            plan_ahead = _effective_plan_ahead(
+                spec.prefetch.plan_ahead, store, spec.batch_size)
             faults = getattr(spec.store, "faults", None)
             loader = OverlappedLoader(
                 loader, depth=spec.prefetch.depth,
                 stage_depth=spec.prefetch.stage_depth,
-                plan_ahead=spec.prefetch.plan_ahead,
+                plan_ahead=plan_ahead,
                 lane_timeout=spec.prefetch.lane_timeout_s,
                 max_lane_restarts=spec.prefetch.max_lane_restarts,
                 stall_inject=(faults.lane_stall
@@ -232,6 +242,37 @@ def _build_loader(spec: PipelineSpec, *, g: CSRGraph | None, store=None,
             from repro.core.pipeline import PrefetchingLoader
             loader = PrefetchingLoader(loader, depth=spec.prefetch.depth)
     return loader
+
+
+def _effective_plan_ahead(plan_ahead: int, store, batch_size: int) -> int:
+    """Frontier-planner guard: warming ``plan_ahead`` future batches only
+    helps while the page cache can hold the planned window's working set
+    alongside the current batch.  When it cannot, the warmed blocks evict
+    each other (and the live batch's blocks) before they are consumed —
+    a measured slowdown — so the planner is disabled with a one-time
+    warning instead of letting the config footgun fire."""
+    if not plan_ahead or store is None or not hasattr(store, "cache_blocks"):
+        return plan_ahead
+    try:
+        bb = store.block_bytes
+        row = store._dtype["features"].itemsize * store.feat_dim
+        esz = store._dtype["indices"].itemsize
+        avg_deg = store.num_edges / max(1, store.num_nodes)
+        per_target = (max(1, -(-row // bb))            # feature row blocks
+                      + max(1, int(avg_deg * esz // bb) + 1))  # edge list
+        working_set = (plan_ahead + 1) * batch_size * per_target
+    except (AttributeError, KeyError, TypeError):
+        return plan_ahead
+    if store.cache_blocks >= working_set:
+        return plan_ahead
+    warnings.warn(
+        f"plan_ahead={plan_ahead} disabled: the page cache holds "
+        f"{store.cache_blocks} blocks but the planned window's working "
+        f"set is ~{working_set} blocks ({plan_ahead + 1} batches x "
+        f"{batch_size} targets); warming would thrash the cache it is "
+        "trying to fill — grow cache_mb or lower plan_ahead to re-enable",
+        stacklevel=3)
+    return 0
 
 
 def batch_targets(g, idx: int, batch_size: int,
@@ -275,9 +316,25 @@ class _LoaderBase:
         self.devcache = None
         self.edgecache = None
         self._epoch0 = None
+        self._oracle = None        # OracleReplayer (optimal-policy tiers)
 
     def targets(self, idx: int) -> np.ndarray:
         return batch_targets(self.store, idx, self.batch_size, self.seed)
+
+    def _advance_oracle(self, idx: int) -> None:
+        """Head-of-batch hook for optimal-policy (Belady) tiers: make
+        sure the replay lane has batch ``idx``'s window scheduled, then
+        roll each scheduled cache's two-phase next-use state forward.
+        All three calls are no-ops for lru/pinned configurations."""
+        rep = self._oracle
+        if rep is not None:
+            rep.advance(idx)
+        ec = self.edgecache
+        if ec is not None:
+            ec.oracle_begin_batch(idx)
+        adv = getattr(self.store, "oracle_advance", None)
+        if adv is not None:
+            adv(idx)
 
     def storage_delay(self, trace: SampleTrace) -> float:
         """Replay ``trace`` against the attached engine's cost model and
@@ -347,6 +404,8 @@ class _LoaderBase:
             s["devcache"] = self.devcache.stats()
         if self.edgecache is not None:
             s["edgecache"] = self.edgecache.stats()
+        if self._oracle is not None:
+            s["oracle"] = self._oracle.stats()
         if self._epoch0 is not None:
             for name, fn in self._counter_sources().items():
                 base = self._epoch0.get(name, {})
@@ -356,7 +415,8 @@ class _LoaderBase:
         return s
 
     def close(self) -> None:
-        pass
+        if self._oracle is not None:
+            self._oracle.close()
 
 
 # ---------------------------------------------------------------------------
@@ -406,6 +466,7 @@ class HostSubgraphLoader(_LoaderBase):
 
     def close(self) -> None:
         self.pipeline.close()
+        super().close()
 
 
 # ---------------------------------------------------------------------------
@@ -576,6 +637,7 @@ class PallasSubgraphLoader(_LoaderBase):
 
     def get_batch(self, idx: int) -> Minibatch:
         if self.devcache is None and self.edgecache is None:
+            self._advance_oracle(idx)
             targets = self.targets(idx)
             self.impose_storage_cost(idx)
             key = self._jax.random.fold_in(self._key, idx)
@@ -623,6 +685,7 @@ class PallasSubgraphLoader(_LoaderBase):
         holds for every cache combination.  The edge-block cache is owned
         entirely by this lane (plan+resolve+dispatch per hop), so its
         counters delta here is the batch's exact edge traffic."""
+        self._advance_oracle(idx)
         targets = self.targets(idx)
         self.impose_storage_cost(idx)
         key = self._jax.random.fold_in(self._key, idx)
@@ -642,7 +705,7 @@ class PallasSubgraphLoader(_LoaderBase):
         if edge0 is not None:
             e1 = self.edgecache.counters()
             edge_io = {k: e1[k] - edge0[k] for k in e1}
-        return dict(targets=targets, hops=hops, labels=labels,
+        return dict(idx=idx, targets=targets, hops=hops, labels=labels,
                     ctx=ctx, io0=io0, edge_io=edge_io)
 
     def reset_staged_state(self) -> None:
@@ -688,6 +751,7 @@ class PallasSubgraphLoader(_LoaderBase):
             # an unbucketed width would recompile the downstream take per
             # batch
             try:
+                self.devcache.oracle_begin_batch(s["idx"])
                 with self._attr(s["ctx"]):
                     plan = self.devcache.plan_rows(
                         self._pad_pow2(uniq, uniq[-1]), n_valid=uniq.size)

@@ -70,6 +70,11 @@ def make_host_producer(store, batch_size: int, fanouts=DEFAULT_FANOUTS,
     """
 
     def produce(batch_idx: int) -> Minibatch:
+        # optimal-policy page cache: roll the Belady schedule forward
+        # before this batch's reads (no-op for lru/pinned stores)
+        adv = getattr(store, "oracle_advance", None)
+        if adv is not None:
+            adv(batch_idx)
         targets = batch_targets(store, batch_idx, batch_size, seed)
         io0 = _io_snapshot(store)
         if sampler == "saint":

@@ -169,3 +169,70 @@ def sample_khop_jax(indptr, indices, targets, fanouts=DEFAULT_FANOUTS, *,
                                       jax.random.fold_in(key, i))
         hops.append(frontier)
     return hops
+
+
+# ---------------------------------------------------------------------------
+# Replay hooks (oracle / Belady scheduling — see storage/oracle.py)
+#
+# Because every sampler above is seed-deterministic, a future batch's id
+# stream can be *replayed* ahead of time without touching the live store:
+# the only data dependency is the neighbor array, which the replayer reads
+# through a raw positional reader (unbilled — no page-cache traffic, no
+# counters).  The replayed streams feed ``storage.oracle`` which derives
+# per-entry next-use times for Belady eviction in both cache tiers.
+# ---------------------------------------------------------------------------
+
+def replay_khop(reader, targets: np.ndarray, fanouts=DEFAULT_FANOUTS, *,
+                seed: int = 0) -> SampleTrace:
+    """Replay the host sampler's id stream for one batch.
+
+    ``reader`` implements the GraphStore access protocol
+    (``out_degrees``/``gather_edges``) over *raw* reads — e.g.
+    ``storage.oracle.RawDiskReader`` — so the replay is bit-identical to
+    the live ``sample_khop`` at equal seeds while issuing no billed
+    store traffic.  Returns the same ``SampleTrace`` (``io`` is None)."""
+    return sample_khop(reader, targets, fanouts, seed=seed)
+
+
+def replay_one_hop_ids(indptr: np.ndarray, read_indices, frontier: np.ndarray,
+                       rand: np.ndarray) -> np.ndarray:
+    """numpy mirror of ``sample_one_hop_jax`` (and the Pallas cached
+    sampling kernel, which implements the same semantics): ``rand`` is the
+    hop's raw ``jax.random.randint(..., 0, 2**31-1)`` draw reshaped to
+    ``(flat, fanout)``; neighbor values come from ``read_indices(pos)``
+    (raw positional reads into the edge array).  deg==0 rows self-loop."""
+    flat = frontier.reshape(-1)
+    start = indptr[flat].astype(np.int64)
+    deg = indptr[flat + 1].astype(np.int64) - start
+    fanout = rand.shape[1]
+    r = rand.astype(np.int64) % np.maximum(deg, 1)[:, None]
+    picked = np.broadcast_to(flat[:, None], (flat.size, fanout)
+                             ).astype(np.int32).copy()   # self-loop fallback
+    live = deg > 0
+    if live.any():
+        pos = start[live, None] + r[live]
+        vals = np.asarray(read_indices(pos.reshape(-1)), np.int32)
+        picked[live] = vals.reshape(pos.shape)
+    return picked.reshape(frontier.shape + (fanout,))
+
+
+def replay_khop_jax_ids(indptr: np.ndarray, read_indices, targets, fanouts, *,
+                        key, rand_shape_fn=None) -> list[np.ndarray]:
+    """Replay the JAX/Pallas sampler's per-hop id tensors on the host.
+
+    ``key`` is the batch key (``fold_in(key(seed), batch_idx)``); hop i
+    draws with ``fold_in(key, i)`` exactly like ``sample_khop_jax``.
+    ``rand_shape_fn(frontier, fanout)`` overrides the randint shape when
+    the live path draws with a different (same-size) shape — the raw bit
+    stream is shape-independent, this is belt and braces for exactness."""
+    hops = [np.asarray(targets, np.int32)]
+    frontier = hops[0]
+    for i, f in enumerate(fanouts):
+        shape = ((frontier.reshape(-1).shape[0], f) if rand_shape_fn is None
+                 else rand_shape_fn(frontier, f))
+        rand = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), shape, 0, 2**31 - 1))
+        frontier = replay_one_hop_ids(indptr, read_indices, frontier,
+                                      rand.reshape(-1, f))
+        hops.append(frontier)
+    return hops

@@ -139,6 +139,146 @@ class LRUCache:
                 "evictions": self.evictions}
 
 
+#: "never used again inside the replayed window" sentinel for oracle
+#: next-use times.  Large enough to dominate any real batch index while
+#: staying safely inside int64 when negated for max-heap ordering.
+FAR_NEXT_USE = 1 << 62
+
+
+class OracleCache:
+    """Belady (optimal) eviction over block IDs, driven by a replayed
+    sampler schedule.
+
+    Same live-cache surface and hit/miss/eviction counters as
+    ``LRUCache`` (``access``/``access_run``/``get``/``peek``/``put``/
+    ``counters``), but the victim on overflow is the resident block whose
+    *next use* — known ahead of time because the sampler's id stream is
+    seed-deterministic and replayed one window ahead — is farthest in the
+    future (``FAR_NEXT_USE`` if never reused inside the window).
+
+    Schedule delivery is two-phase per batch (``begin_batch``): the
+    current batch's blocks are first protected at next-use == *now* for
+    the batch's duration (so intra-batch reuse never loses to a block
+    with a scheduled future use), and their true after-this-batch
+    next-use times are applied when the following batch begins.  The
+    batch is the scheduling quantum: below one batch's unique-block
+    working set the whole residency turns over every batch and no
+    batch-granular policy can beat recency — Belady's advantage needs
+    capacities that hold at least a batch (the policy sweep's floor).
+    Without any schedule the cache degrades to FIFO — a quality
+    fallback only; reads stay correct either way.
+    """
+
+    def __init__(self, capacity_blocks: int):
+        self.capacity = max(1, int(capacity_blocks))
+        self._data: dict[int, object] = {}   # resident payloads (ins. order)
+        self._nu: dict[int, int] = {}        # scheduled next use (abs. batch)
+        self._heap: list[tuple[int, int, int]] = []  # (-next_use, seq, bid)
+        self._latest: dict[int, int] = {}    # bid -> authoritative heap seq
+        self._seq = 0                        # heap tiebreak: FIFO among ties
+        self._pending: tuple[np.ndarray, np.ndarray] | None = None
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- schedule delivery --------------------------------------------------
+    def _push(self, bid: int) -> None:
+        """(Re-)insert ``bid``'s authoritative heap entry at its current
+        priority; older entries for the same bid turn stale (lazy)."""
+        import heapq
+        heap = self._heap
+        if len(heap) > max(1024, 16 * self.capacity):
+            # lazy entries dominate: rebuild from the residents
+            heap[:] = [(-self._next_use_of(b), s, b)
+                       for b, s in self._latest.items()]
+            heapq.heapify(heap)
+        heapq.heappush(heap, (-self._next_use_of(bid), self._seq, bid))
+        self._latest[bid] = self._seq
+        self._seq += 1
+
+    def _set(self, bid: int, next_use: int) -> None:
+        if next_use >= FAR_NEXT_USE:
+            self._nu.pop(bid, None)
+        else:
+            self._nu[bid] = next_use
+        if bid in self._data:
+            self._push(bid)
+
+    def begin_batch(self, idx: int, blocks: np.ndarray,
+                    next_use: np.ndarray) -> None:
+        """Enter batch ``idx``: apply the previous batch's deferred
+        after-batch next-use times, then protect this batch's ``blocks``
+        at next-use == ``idx`` (the nearest possible time — intra-batch
+        reuse must never lose to a block with a scheduled future use)
+        and defer their ``next_use`` (first use *after* ``idx``) to the
+        next call."""
+        if self._pending is not None:
+            for b, v in zip(*self._pending):
+                self._set(int(b), int(v))
+        for b in blocks:
+            self._set(int(b), int(idx))
+        self._pending = (blocks, next_use)
+
+    def _next_use_of(self, bid: int) -> int:
+        return self._nu.get(bid, FAR_NEXT_USE)
+
+    def _evict_one(self) -> tuple[int, object]:
+        """Pop the resident block with the farthest next use (lazy
+        max-heap: stale entries — evicted blocks or superseded
+        priorities — are skipped; FIFO among equal next-use)."""
+        import heapq
+        heap = self._heap
+        while heap:
+            _, seq, bid = heapq.heappop(heap)
+            if bid in self._data and seq == self._latest.get(bid):
+                self._latest.pop(bid, None)
+                return bid, self._data.pop(bid)
+        bid = next(iter(self._data))             # unreachable fallback
+        self._latest.pop(bid, None)
+        return bid, self._data.pop(bid)
+
+    # -- trace-replay path --------------------------------------------------
+    def access(self, block: int) -> bool:
+        if block in self._data:
+            self.hits += 1
+            return True
+        self.misses += 1
+        self.put_new(block, None)
+        return False
+
+    def access_run(self, first: int, n: int) -> int:
+        return sum(0 if self.access(first + i) else 1 for i in range(n))
+
+    # -- live-cache path (payload-carrying) ---------------------------------
+    def get(self, block: int):
+        """Payload for ``block`` or None on miss (counts either way)."""
+        if block in self._data:
+            self.hits += 1
+            return self._data[block]
+        self.misses += 1
+        return None
+
+    def peek(self, block: int):
+        """Payload if resident (no counters) — the post-fetch re-check of
+        the sharded read path, where the fetch itself already counted."""
+        return self._data.get(block)
+
+    def put_new(self, block: int, payload) -> tuple[int, object] | None:
+        evicted = None
+        if block not in self._data and len(self._data) >= self.capacity:
+            evicted = self._evict_one()
+            self.evictions += 1
+        self._data[block] = payload
+        self._push(block)
+        return evicted
+
+    put = put_new
+
+    def counters(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
 def select_pinned_blocks(g, budget_blocks: int, block_bytes: int = 4096,
                          entry_bytes: int = EDGE_ENTRY_BYTES
                          ) -> dict[int, object]:

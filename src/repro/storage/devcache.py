@@ -148,9 +148,9 @@ class DeviceArrayCache:
         self.array = array
         self.capacity = int(capacity)
         self.policy = policy
-        if self.policy not in ("lru", "pinned"):
+        if self.policy not in ("lru", "pinned", "optimal"):
             raise ValueError(f"unknown device-cache policy {self.policy!r};"
-                             " have ('lru', 'pinned')")
+                             " have ('lru', 'pinned', 'optimal')")
         if self.capacity < 1:
             raise ValueError(
                 f"device {array} cache needs at least one {self.entry_noun}")
@@ -201,6 +201,16 @@ class DeviceArrayCache:
         self._free = np.arange(self.capacity)
         self._free_ptr = 0              # slots [_free_ptr:] still free
         self._clock = 0
+
+        # Belady state (policy='optimal'): per-entry next-use times fed
+        # by the replay lane (storage.oracle), batch-granular.  Entries
+        # with no scheduled reuse sit at FAR_NEXT_USE — prime victims.
+        if self.policy == "optimal":
+            from repro.storage.blockdev import FAR_NEXT_USE
+            self._far = FAR_NEXT_USE
+            self._next_use = np.full(n + 1, FAR_NEXT_USE, np.int64)
+            self._oracle_updates: dict[int, tuple] = {}
+            self._oracle_pending: tuple | None = None
 
         # device state: +1 indirection entry — index n is the
         # scatter-padding sentinel, never queried by a real id
@@ -299,10 +309,26 @@ class DeviceArrayCache:
         self._free_ptr += take
         n_evict = m - take
         if n_evict:
-            occupied = np.flatnonzero((self._slot_entry >= 0)
-                                      & ~self._slot_pinned)
-            oldest = occupied[np.argpartition(
-                self._slot_stamp[occupied], n_evict - 1)[:n_evict]]
+            if self.policy == "optimal":
+                # Belady: evict the resident entries whose next use is
+                # farthest (batched lexsort, no per-id loop).  The current
+                # segment's hits are hard-masked — they must survive until
+                # the segment's gather regardless of schedule — and the
+                # stamp breaks next-use ties, so with no schedule fed the
+                # selection degrades to exact LRU.  The residency
+                # contract guarantees enough non-current candidates:
+                # capacity >= segment hits + misses.
+                cand = (self._slot_entry >= 0) & ~self._slot_pinned
+                cand[hit_slots] = False
+                occupied = np.flatnonzero(cand)
+                nu = self._next_use[self._slot_entry[occupied]]
+                order = np.lexsort((self._slot_stamp[occupied], -nu))
+                oldest = occupied[order[:n_evict]]
+            else:
+                occupied = np.flatnonzero((self._slot_entry >= 0)
+                                          & ~self._slot_pinned)
+                oldest = occupied[np.argpartition(
+                    self._slot_stamp[occupied], n_evict - 1)[:n_evict]]
             victims = self._slot_entry[oldest]
             self._host_slot[victims] = -1
             self._slot_entry[oldest] = -1
@@ -457,6 +483,43 @@ class DeviceArrayCache:
             for seg in self._segments(ids):
                 if seg.size:
                     self._resolve(seg)
+
+    # -- oracle (Belady) schedule delivery -----------------------------------
+    def oracle_feed(self, updates: dict) -> None:
+        """Accept per-batch next-use updates from the replay lane:
+        ``{batch_idx: (entry_ids, next_use)}`` where ``next_use[j]`` is
+        the first batch index *after* ``batch_idx`` at which
+        ``entry_ids[j]`` is requested again (``FAR_NEXT_USE`` if never
+        inside the replayed window).  Only valid under
+        ``policy='optimal'``."""
+        if self.policy != "optimal":
+            raise ValueError(
+                f"oracle_feed on a {self.policy!r}-policy device cache")
+        with self._lock:
+            self._oracle_updates.update(updates)
+
+    def oracle_begin_batch(self, idx: int) -> None:
+        """Enter batch ``idx`` (called once per batch, in batch order,
+        from the lane that owns this cache).  Two-phase application: the
+        previous batch's deferred after-batch next-use times land first,
+        then this batch's entries are protected at next-use == ``idx``
+        for the batch's duration (so intra-batch reuse never loses a
+        victim race to an entry with a scheduled future use); their true
+        after-``idx`` times are deferred to the next call.  A batch with
+        no schedule (replay behind, or a restart replay) is a no-op —
+        eviction then falls back to the stamp tiebreak (exact LRU)."""
+        if self.policy != "optimal":
+            return
+        with self._lock:
+            if self._oracle_pending is not None:
+                ids, nu = self._oracle_pending
+                self._next_use[ids] = nu
+                self._oracle_pending = None
+            upd = self._oracle_updates.pop(idx, None)
+            if upd is not None:
+                ids, nu = upd
+                self._next_use[ids] = idx
+                self._oracle_pending = (ids, nu)
 
     # -- accounting ----------------------------------------------------------
     def counters(self) -> dict:

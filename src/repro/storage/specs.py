@@ -83,7 +83,9 @@ class DiskStoreSpec:
     opposed to the simulated engines above): the on-disk layout is
     block-aligned at ``block_bytes`` and reads go through a page cache of
     ``cache_mb`` under the ``policy`` placement rule ('lru' = OS-page-cache
-    style recency, 'pinned' = §IV-C hot-block pinning + LRU spill).  The
+    style recency, 'pinned' = §IV-C hot-block pinning + LRU spill,
+    'optimal' = Belady eviction from a replayed sampler schedule,
+    ``storage.oracle``).  The
     page cache is split into ``lock_shards`` hashed-block shards so
     concurrent producer workers don't serialize on one lock (the engines'
     shared-resource contention model, Fig. 17).  ``io_threads`` sizes the
@@ -140,12 +142,15 @@ class DeviceCacheSpec:
     (``storage.devcache.DeviceFeatureCache``): ``rows`` is the fixed
     device-side capacity in feature rows (0 = disabled, full-table
     upload); ``policy`` picks the host-managed placement — 'lru'
-    recency, or 'pinned' with the hottest-degree ``pinned_fraction`` of
+    recency, 'pinned' with the hottest-degree ``pinned_fraction`` of
     the capacity staged permanently (the paper's skewed-access
-    characterization: hub rows dominate the gather stream)."""
+    characterization: hub rows dominate the gather stream), or
+    'optimal' — Belady eviction from a replayed sampler schedule
+    (``storage.oracle``), computed ``oracle_window`` batches ahead."""
     rows: int = 4096
     policy: str = "pinned"
     pinned_fraction: float = 0.5
+    oracle_window: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -43,7 +43,8 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.graph import CSRGraph
-from repro.storage.blockdev import LRUCache, select_pinned_blocks
+from repro.storage.blockdev import (LRUCache, OracleCache,
+                                    select_pinned_blocks)
 from repro.storage.faults import FaultInjector, FaultSpec
 from repro.storage.integrity import block_checksums, crc32c
 from repro.storage.specs import DEFAULT, RetrySpec, SystemSpec
@@ -275,7 +276,11 @@ class DiskStore:
     models the OS page cache; ``policy='pinned'`` is the paper's §IV-C
     user-space scratchpad — half the budget statically pins the
     hottest (highest-degree) edge blocks, preloaded at open, the rest is
-    LRU.  Counters (``io_counters``) record requests, block fetches,
+    LRU; ``policy='optimal'`` is Belady eviction driven by a replayed
+    sampler schedule (``storage.oracle`` — the Ginex-style offline
+    oracle; the cache is then unsharded and fed via ``oracle_feed`` /
+    ``oracle_advance``).  Counters (``io_counters``) record requests,
+    block fetches,
     bytes fetched from disk, and the cache's hits/misses/evictions.
 
     Concurrency: the LRU budget is split into ``lock_shards``
@@ -337,9 +342,9 @@ class DiskStore:
         self.cache_mb = (spec.diskstore.cache_mb if cache_mb is None
                          else float(cache_mb))
         self.policy = policy or spec.diskstore.policy
-        if self.policy not in ("lru", "pinned"):
+        if self.policy not in ("lru", "pinned", "optimal"):
             raise ValueError(f"unknown cache policy {self.policy!r}; "
-                             "have ('lru', 'pinned')")
+                             "have ('lru', 'pinned', 'optimal')")
 
         self._arrays = self.manifest["arrays"]
         self._ns = {k: i for i, k in enumerate(_ARRAY_ORDER)
@@ -377,11 +382,23 @@ class DiskStore:
         shards = (spec.diskstore.lock_shards if lock_shards is None
                   else int(lock_shards))
         shards = max(1, min(shards, lru_blocks))
-        per = [lru_blocks // shards + (1 if i < lru_blocks % shards else 0)
-               for i in range(shards)]
-        self._shards = [LRUCache(max(1, c)) for c in per]
+        if self.policy == "optimal":
+            # Belady victim selection needs one global next-use ordering
+            # over the whole budget, so the cache stays unsharded (one
+            # lock); the replayed schedule arrives via oracle_feed /
+            # oracle_advance
+            shards = 1
+            self._shards = [OracleCache(lru_blocks)]
+        else:
+            per = [lru_blocks // shards
+                   + (1 if i < lru_blocks % shards else 0)
+                   for i in range(shards)]
+            self._shards = [LRUCache(max(1, c)) for c in per]
         self._locks = [threading.Lock() for _ in range(shards)]
         self.lock_shards = shards
+        self._oracle_replayer = None
+        self._oracle_updates: dict[int, tuple] = {}
+        self._oracle_lock = threading.Lock()
         io_threads = (spec.diskstore.io_threads if io_threads is None
                       else int(io_threads))
         if io_threads < 1:
@@ -825,6 +842,113 @@ class DiskStore:
             self._warmed_nodes += int(nodes.size)
         return n
 
+    # -- oracle (Belady) scheduling hooks ------------------------------------
+    def read_indices_at(self, positions) -> np.ndarray:
+        """Raw positional reads of ``indices[positions]`` for sampler
+        replay: direct (retry-protected) block preads that bypass the
+        page cache entirely — no residency changes, no request/hit/miss
+        accounting.  The oracle replayer must observe the same bytes
+        training will read *without* perturbing the cache it is
+        scheduling."""
+        dt = self._dtype["indices"]
+        per = self.block_bytes // dt.itemsize
+        pos = np.asarray(positions, np.int64).reshape(-1)
+        uniq, inv = np.unique(pos, return_inverse=True)
+        out = np.empty(uniq.size, dt)
+        blocks = uniq // per
+        for b in np.unique(blocks):
+            sel = blocks == b
+            data = np.frombuffer(self._fetch("indices", int(b)), dtype=dt)
+            out[sel] = data[uniq[sel] - int(b) * per]
+        return out[inv].reshape(np.shape(positions))
+
+    def replay_block_ids(self, *, feature_nodes=None, edge_nodes=None,
+                         label_nodes=None, edge_blocks=None,
+                         block_e: int | None = None) -> np.ndarray:
+        """Namespaced page-cache block ids a replayed batch's reads will
+        touch: feature rows of ``feature_nodes``, neighbor lists of
+        ``edge_nodes``, label entries of ``label_nodes``, and/or
+        ``block_e``-entry edge blocks (the device edge-cache fetch
+        granularity).  Pure layout arithmetic over the resident
+        ``indptr`` — no disk reads."""
+        B = self.block_bytes
+        parts: list[np.ndarray] = []
+
+        def ranges_to_blocks(key, lo, hi):
+            ns = self._ns[key] * _NS_STRIDE
+            lo = np.asarray(lo, np.int64).reshape(-1)
+            hi = np.asarray(hi, np.int64).reshape(-1)
+            keep = hi > lo
+            lo, hi = lo[keep], hi[keep]
+            if lo.size == 0:
+                return
+            first = lo // B
+            counts = (hi - 1) // B - first + 1
+            total = int(counts.sum())
+            starts = np.repeat(first, counts)
+            offs = (np.arange(total)
+                    - np.repeat(np.cumsum(counts) - counts, counts))
+            parts.append(ns + starts + offs)
+
+        if feature_nodes is not None and "features" in self._arrays:
+            row = self._dtype["features"].itemsize * self.feat_dim
+            ids = np.asarray(feature_nodes, np.int64).reshape(-1)
+            ranges_to_blocks("features", ids * row, ids * row + row)
+        if edge_nodes is not None:
+            isz = self._dtype["indices"].itemsize
+            ids = np.asarray(edge_nodes, np.int64).reshape(-1)
+            ranges_to_blocks("indices", self.indptr[ids] * isz,
+                             self.indptr[ids + 1] * isz)
+        if edge_blocks is not None:
+            isz = self._dtype["indices"].itemsize
+            eb = np.asarray(edge_blocks, np.int64).reshape(-1)
+            lo_e = eb * int(block_e)
+            hi_e = np.minimum(lo_e + int(block_e), self.num_edges)
+            ranges_to_blocks("indices", lo_e * isz, hi_e * isz)
+        if label_nodes is not None and "labels" in self._arrays:
+            isz = self._dtype["labels"].itemsize
+            ids = np.asarray(label_nodes, np.int64).reshape(-1)
+            ranges_to_blocks("labels", ids * isz, ids * isz + isz)
+        if not parts:
+            return np.empty(0, np.int64)
+        return np.unique(np.concatenate(parts))
+
+    def oracle_attach(self, replayer) -> None:
+        """Bind the replay lane that keeps this store's Belady schedule
+        one window ahead (``storage.oracle.OracleReplayer``).  Only
+        meaningful — and only allowed — under ``policy='optimal'``."""
+        if self.policy != "optimal":
+            raise ValueError(
+                f"oracle_attach on a {self.policy!r}-policy store; the "
+                "replayed schedule only drives policy='optimal'")
+        self._oracle_replayer = replayer
+
+    def oracle_feed(self, updates: dict) -> None:
+        """Accept per-batch next-use updates from the replay lane:
+        ``{batch_idx: (block_ids, next_use)}`` in this store's namespaced
+        block space."""
+        with self._oracle_lock:
+            self._oracle_updates.update(updates)
+
+    def oracle_advance(self, idx: int) -> None:
+        """Enter batch ``idx``: make sure its window's schedule has been
+        replayed (blocking only when the replay lane is behind) and apply
+        the batch's next-use times to the page cache.  No-op for
+        non-optimal policies and for batches with no schedule (the cache
+        then degrades toward FIFO — quality only, reads stay exact)."""
+        if self.policy != "optimal":
+            return
+        rep = self._oracle_replayer
+        if rep is not None:
+            rep.advance(idx)
+        with self._oracle_lock:
+            upd = self._oracle_updates.pop(idx, None)
+        if upd is None:
+            return
+        bids, nu = upd
+        with self._locks[0]:
+            self._shards[0].begin_batch(idx, bids, nu)
+
     # -- accounting ----------------------------------------------------------
     def io_counters(self) -> dict:
         hits = misses = evictions = 0
@@ -882,6 +1006,9 @@ class DiskStore:
                         name=self.name)
 
     def close(self) -> None:
+        if self._oracle_replayer is not None:
+            self._oracle_replayer.close()
+            self._oracle_replayer = None
         if self._pool is not None:
             # drain before the fds go away: in-flight warms/gathers hold
             # open descriptors, and cancel whatever hasn't started
