@@ -367,6 +367,8 @@ def _row_name(spec) -> str:
         suffix.append("overlap")
     if spec.store.faults is not None:
         suffix.append("faults")
+    if spec.obs.enabled:
+        suffix.append("obs")
     return spec.backend.name + (f"@{'+'.join(suffix)}" if suffix else "")
 
 
@@ -575,6 +577,16 @@ def main(argv=None):
                                           steps=args.warmup + args.steps,
                                           start=args.warmup, on_step=track)
             loader_stats = pipe.stats()
+            from repro.obs import names as obs_names
+            if pipe.obs is not None:
+                # telemetry-enabled rows embed the session's own final
+                # snapshot (registry counters + absorbed stats surfaces)
+                row_metrics = pipe.obs.registry.snapshot()
+            else:
+                row_metrics = obs_names.flatten_stats(loader_stats)
+            row_metrics.update(obs_names.train_metrics(
+                stats.steps, stats.idle_s, stats.busy_s, stats.steps_per_s,
+                stats.idle_fraction))
         finally:
             pipe.close()
         results[row] = {
@@ -589,6 +601,11 @@ def main(argv=None):
             # string-splitting the legacy top-level comma list
             "graph_store": spec.store.kind,
             "loader_stats": loader_stats,
+            # the final metrics snapshot under canonical names
+            # (repro.obs.names): the same flat namespace the JSONL
+            # sink writes, embedded in every row whether or not the
+            # row's spec enabled telemetry
+            "metrics": row_metrics,
             # the exact configuration that produced this row, verbatim
             "spec": spec.to_dict(),
         }

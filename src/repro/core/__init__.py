@@ -13,7 +13,7 @@ loader     — the unified minibatch data plane: one SubgraphLoader
              interface over the host / isp / pallas backends
 """
 
-from repro.core.config import (BackendSpec, CacheTierSpec, Pipeline,
+from repro.core.config import (BackendSpec, CacheTierSpec, ObsSpec, Pipeline,
                                PipelineSpec, PrefetchSpec, SamplerSpec,
                                StoreSpec, add_pipeline_args, build_pipeline,
                                spec_from_args)

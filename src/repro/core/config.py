@@ -286,11 +286,38 @@ class PrefetchSpec:
             raise ValueError("prefetch.max_lane_restarts must be >= 0")
 
 
+@dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Telemetry configuration (the ``obs`` node).
+
+    ``enabled`` turns the unified telemetry layer on: a per-pipeline
+    metrics registry absorbing every counter surface under canonical
+    names (``repro.obs.names``), and — when ``trace_path`` is set — the
+    span tracer whose Chrome/Perfetto trace-event JSON renders the run
+    as a lane timeline.  ``metrics_path`` adds periodic JSONL snapshots
+    every ``metrics_interval_s`` (plus one final snapshot at close).
+    Setting either path implies ``enabled``.  Disabled (the default) is
+    a no-op fast path and telemetry never perturbs bits either way:
+    loss trajectories are repr-identical on vs off (CI-gated)."""
+
+    enabled: bool = False
+    trace_path: str | None = None
+    metrics_path: str | None = None
+    metrics_interval_s: float = 5.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "enabled", bool(
+            self.enabled or self.trace_path or self.metrics_path))
+        if self.metrics_interval_s <= 0:
+            raise ValueError("obs.metrics_interval_s must be > 0")
+
+
 _COMPONENTS = {
     "backend": BackendSpec,
     "sampler": SamplerSpec,
     "store": StoreSpec,
     "prefetch": PrefetchSpec,
+    "obs": ObsSpec,
 }
 
 
@@ -308,6 +335,7 @@ class PipelineSpec:
     store: StoreSpec = StoreSpec()
     cache_tiers: tuple[CacheTierSpec, ...] = ()
     prefetch: PrefetchSpec = PrefetchSpec()
+    obs: ObsSpec = ObsSpec()
     batch_size: int = 64
     seed: int = 0
     engine: str = "none"
@@ -419,12 +447,13 @@ class Pipeline:
 
     def __init__(self, spec: PipelineSpec, loader, *, graph=None, store=None,
                  engine=None, owns_store: bool = False,
-                 tmpdir: str | None = None):
+                 tmpdir: str | None = None, obs_session=None):
         self.spec = spec
         self.loader = loader
         self.graph = graph
         self.store = store
         self.engine = engine
+        self.obs = obs_session
         self.notes: list[str] = []
         self._owns_store = owns_store
         self._tmpdir = tmpdir
@@ -485,6 +514,10 @@ class Pipeline:
         try:
             self.loader.close()
         finally:
+            if self.obs is not None:
+                # flush the trace + final metrics snapshot before the
+                # store (a collector source) goes away
+                self.obs.close()
             if self._owns_store and self.store is not None:
                 self.store.close()
             if self._tmpdir is not None:
@@ -578,11 +611,26 @@ def build_pipeline(spec: PipelineSpec, graph_or_store=None, *, g=None,
         engine = make_engine(spec.engine, g,
                              measured=store is not None, store=store)
 
+    obs_session = None
+    if spec.obs.enabled:
+        from repro import obs
+        obs_session = obs.install(obs.ObsSession(
+            trace_path=spec.obs.trace_path,
+            metrics_path=spec.obs.metrics_path,
+            metrics_interval_s=spec.obs.metrics_interval_s))
+
     from repro.core.loader import _build_loader
     loader = _build_loader(spec, g=g, store=store, mesh=mesh,
                            storage_engine=engine)
+    if obs_session is not None:
+        # absorb the loader's counter surfaces (store I/O bill, cache
+        # tiers, oracle lane, lane supervisor) into every snapshot
+        from repro.obs import names as _names
+        obs_session.registry.register_collector(
+            lambda: _names.flatten_stats(loader.stats()))
     pipe = Pipeline(spec, loader, graph=g, store=store, engine=engine,
-                    owns_store=owns_store, tmpdir=tmpdir)
+                    owns_store=owns_store, tmpdir=tmpdir,
+                    obs_session=obs_session)
     pipe.notes = notes
     return pipe
 
@@ -734,6 +782,20 @@ FLAG_TABLE = {
         type=float,
         help="device tier: fraction of the capacity staged permanently "
              "under the pinned policy")),
+    "--trace-out": ("obs.trace_path", dict(
+        metavar="PATH",
+        help="telemetry: write a Chrome/Perfetto trace-event JSON of "
+             "the run (pipeline lanes, consumer steps, disk preads) to "
+             "PATH; implies obs.enabled")),
+    "--metrics-out": ("obs.metrics_path", dict(
+        metavar="PATH",
+        help="telemetry: append periodic JSONL metrics snapshots "
+             "(canonical counter namespace: per-tier hit rates, I/O "
+             "bytes, faults) to PATH; implies obs.enabled")),
+    "--metrics-interval": ("obs.metrics_interval_s", dict(
+        type=float,
+        help="telemetry: seconds between JSONL metrics snapshots "
+             "(a final snapshot is always written at close)")),
 }
 
 _DEFAULT_SPEC = None

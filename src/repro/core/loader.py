@@ -60,11 +60,13 @@ from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+from repro import obs
 from repro.core.config import (BackendSpec, CacheTierSpec, PipelineSpec,
                                PrefetchSpec, SamplerSpec, StoreSpec)
 from repro.core.graph import CSRGraph
 from repro.core.sampler import (DEFAULT_FANOUTS, SampleTrace, _io_delta,
                                 _io_snapshot, sample_khop, saint_random_walk)
+from repro.obs.metrics import idle_fraction as _idle_fraction
 from repro.storage.store import StoreReadError, nest_fault_counters
 
 
@@ -691,6 +693,10 @@ class PallasSubgraphLoader(_LoaderBase):
         key = self._jax.random.fold_in(self._key, idx)
         make_ctx = getattr(self.store, "make_io_context", None)
         ctx = make_ctx() if make_ctx is not None else None
+        if ctx is not None:
+            # spans of pool preads issued on this batch's behalf inherit
+            # the attribution ctx — and with it the batch index
+            ctx.batch = idx
         io0 = _io_snapshot(self.store) if ctx is None else None
         edge0 = (self.edgecache.counters()
                  if self.edgecache is not None else None)
@@ -753,9 +759,12 @@ class PallasSubgraphLoader(_LoaderBase):
             try:
                 self.devcache.oracle_begin_batch(s["idx"])
                 with self._attr(s["ctx"]):
-                    plan = self.devcache.plan_rows(
-                        self._pad_pow2(uniq, uniq[-1]), n_valid=uniq.size)
-                    self.devcache.fetch_plan(plan)
+                    with obs.trace_span("devcache.plan", batch=s["idx"]):
+                        plan = self.devcache.plan_rows(
+                            self._pad_pow2(uniq, uniq[-1]),
+                            n_valid=uniq.size)
+                    with obs.trace_span("devcache.fetch", batch=s["idx"]):
+                        self.devcache.fetch_plan(plan)
                 s["plan"] = plan
             except StoreReadError as e:
                 self._note_devcache_failure(e)
@@ -773,7 +782,8 @@ class PallasSubgraphLoader(_LoaderBase):
         hop_ids, uniq = s["hop_ids"], s["uniq"]
         plan = s.get("plan")
         if self.devcache is not None and plan is not None:
-            rows = self.devcache.execute_plan(plan)
+            with obs.trace_span("devcache.install", batch=s["idx"]):
+                rows = self.devcache.execute_plan(plan)
             F = self.devcache.feat_dim
             hop_feats = []
             for h in hop_ids:
@@ -932,8 +942,7 @@ class RunStats:
 
     @property
     def idle_fraction(self) -> float:
-        total = self.idle_s + self.busy_s
-        return self.idle_s / total if total > 0 else 0.0
+        return _idle_fraction(self.idle_s, self.busy_s)
 
     @property
     def steps_per_s(self) -> float:
@@ -953,16 +962,19 @@ def train_loop(loader, train_step, state, *, steps: int, start: int = 0,
     t_start = time.perf_counter()
     for i in range(start, steps):
         t0 = time.perf_counter()
-        mb = loader.get_batch(i)
+        with obs.trace_span("consume.wait", batch=i, lane="consumer"):
+            mb = loader.get_batch(i)
         t1 = time.perf_counter()
-        state, metrics = train_step(state, mb)
-        # async dispatch would otherwise push device compute into the next
-        # step's idle window and skew the idle/busy split
-        jax.block_until_ready(metrics)
+        with obs.trace_span("consume.step", batch=i, lane="consumer"):
+            state, metrics = train_step(state, mb)
+            # async dispatch would otherwise push device compute into the
+            # next step's idle window and skew the idle/busy split
+            jax.block_until_ready(metrics)
         t2 = time.perf_counter()
         stats.idle_s += t1 - t0
         stats.busy_s += t2 - t1
         stats.steps += 1
+        obs.tick()                   # periodic JSONL metrics snapshot
         if on_step is not None:
             on_step(i, state, metrics)
     stats.wall_s = time.perf_counter() - t_start

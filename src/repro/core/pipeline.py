@@ -26,9 +26,11 @@ from typing import Callable
 
 import numpy as np
 
+from repro import obs
 from repro.core.loader import Minibatch, batch_targets
 from repro.core.sampler import (DEFAULT_FANOUTS, _io_delta, _io_snapshot,
                                 sample_khop, saint_random_walk)
+from repro.obs.metrics import idle_fraction as _idle_fraction
 from repro.storage.store import nest_fault_counters
 
 
@@ -43,8 +45,7 @@ class PipelineStats:
 
     @property
     def idle_fraction(self) -> float:
-        total = self.consumer_idle_s + self.consumer_busy_s
-        return self.consumer_idle_s / total if total > 0 else 0.0
+        return _idle_fraction(self.consumer_idle_s, self.consumer_busy_s)
 
 
 def make_host_producer(store, batch_size: int, fanouts=DEFAULT_FANOUTS,
@@ -351,7 +352,8 @@ class OverlappedLoader:
                     warmed_to += 1
             t0 = time.perf_counter()
             try:
-                item = (idx, fn(idx), None)
+                with obs.trace_span(name, batch=idx):
+                    item = (idx, fn(idx), None)
             except BaseException as e:          # surfaced on the consumer
                 item = (idx, None, e)
                 self._note_error(gen, idx, e)
@@ -375,7 +377,8 @@ class OverlappedLoader:
             if err is None:
                 t0 = time.perf_counter()
                 try:
-                    payload = fn(payload)
+                    with obs.trace_span(name, batch=idx):
+                        payload = fn(payload)
                 except BaseException as e:
                     payload, err = None, e
                     self._note_error(gen, idx, e)

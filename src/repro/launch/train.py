@@ -104,6 +104,7 @@ def run_gnn(args, mesh):
     import jax.numpy as jnp
 
     from repro import checkpoint as ckpt
+    from repro import obs
     from repro.core import (GNNConfig, GraphSAGE, build_pipeline,
                             build_train_step, load_dataset, train_loop)
     from repro.distributed.sharding import ShardingRules
@@ -181,6 +182,19 @@ def run_gnn(args, mesh):
         print(f"[train] {stats.steps} steps in {stats.wall_s:.1f}s "
               f"({stats.steps_per_s:.2f} steps/s, consumer idle "
               f"{stats.idle_fraction:.1%}) loader={loader_stats}")
+        # the per-epoch summary table, rendered from the canonical
+        # metric namespace (repro.obs.names)
+        metrics = obs.names.flatten_stats(loader_stats)
+        metrics.update(obs.names.train_metrics(
+            stats.steps, stats.idle_s, stats.busy_s, stats.steps_per_s,
+            stats.idle_fraction))
+        print(obs.epoch_summary(metrics))
+        if pipe.obs is not None:
+            if spec.obs.trace_path:
+                print(f"[obs] trace -> {spec.obs.trace_path} "
+                      "(open at https://ui.perfetto.dev)")
+            if spec.obs.metrics_path:
+                print(f"[obs] metrics snapshots -> {spec.obs.metrics_path}")
         for kind, noun in (("devcache", "rows"), ("edgecache", "blocks")):
             dc = loader_stats.get(kind)
             if dc:

@@ -55,6 +55,7 @@ import threading
 
 import numpy as np
 
+from repro.obs import names as obs_names
 from repro.storage.specs import DEFAULT, DeviceCacheSpec
 
 
@@ -400,9 +401,9 @@ class DeviceArrayCache:
         from the counters, like ``gather_rows``)."""
         ids = np.asarray(ids, np.int64).reshape(-1)
         nv = ids.size if n_valid is None else int(n_valid)
-        plan = AdmissionPlan(segments=[], counters={
-            "hits": 0, "misses": 0, "evictions": 0, "preload_rows": 0,
-            "bytes_uploaded": 0})
+        plan = AdmissionPlan(segments=[],
+                             counters=dict.fromkeys(
+                                 obs_names.DEVCACHE_KEYS, 0))
         offset = 0
         with self._lock:
             plan.generation = self._generation
@@ -523,11 +524,9 @@ class DeviceArrayCache:
 
     # -- accounting ----------------------------------------------------------
     def counters(self) -> dict:
+        # keyed by the canonical metric-name table's leaf keys
         with self._lock:
-            return {"hits": self.hits, "misses": self.misses,
-                    "evictions": self.evictions,
-                    "preload_rows": self.preload_rows,
-                    "bytes_uploaded": self.bytes_uploaded}
+            return {k: getattr(self, k) for k in obs_names.DEVCACHE_KEYS}
 
     def stats(self) -> dict:
         return {"array": self.array, "policy": self.policy,

@@ -42,6 +42,7 @@ import warnings
 import numpy as np
 
 from repro.core import sampler as sampler_mod
+from repro.obs import session as obs_session
 from repro.storage.blockdev import FAR_NEXT_USE
 
 
@@ -224,7 +225,8 @@ class OracleReplayer:
                     return
                 w = self._queue.pop(0)
             try:
-                self._compute(w)
+                with obs_session.trace_span("oracle.window", window=w):
+                    self._compute(w)
             except Exception as e:          # soft-fail: LRU fallback
                 with self._cv:
                     self._errors += 1

@@ -43,6 +43,8 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.graph import CSRGraph
+from repro.obs import names as obs_names
+from repro.obs import session as obs_session
 from repro.storage.blockdev import (LRUCache, OracleCache,
                                     select_pinned_blocks)
 from repro.storage.faults import FaultInjector, FaultSpec
@@ -163,17 +165,21 @@ class IOContext:
     # fault keys are flat here (and in ``io_counters``) so the existing
     # numeric-delta plumbing (``_io_delta``, epoch deltas) keeps working;
     # ``nest_fault_counters`` folds them into ``io["faults"]`` at trace
-    # assembly
-    FAULT_KEYS = ("retries", "io_errors", "short_reads", "corrupt_blocks",
-                  "timeouts")
-    KEYS = ("requests", "block_fetches", "bytes_fetched", "hits",
-            "misses", "evictions") + FAULT_KEYS
+    # assembly.  Both tuples come from the canonical metric-name table
+    # (``repro.obs.names``) — the store emits canonical leaf keys by
+    # construction.
+    FAULT_KEYS = obs_names.FAULT_KEYS
+    KEYS = obs_names.STORE_IO_KEYS + FAULT_KEYS
 
-    __slots__ = ("_lock", "_c")
+    __slots__ = ("_lock", "_c", "batch")
 
     def __init__(self):
         self._lock = threading.Lock()
         self._c = dict.fromkeys(self.KEYS, 0)
+        # telemetry attribution: the batch index this scope's reads
+        # belong to (set by the loader), inherited by pool-thread pread
+        # spans so they nest under their submitting batch in the trace
+        self.batch: int | None = None
 
     def add(self, **deltas) -> None:
         with self._lock:
@@ -486,6 +492,11 @@ class DiskStore:
         r = self.retry
         faults: dict[str, int] = {}
         last: Exception | None = None
+        # pread spans inherit the submitting batch through the IOContext
+        # (``_submit`` installs the submitter's ctx on pool threads);
+        # resolved once per fetch, only when tracing is on
+        span_batch = (self._current_ctx().batch
+                      if obs_session.tracing() else None)
 
         def note(kind):
             faults[kind] = faults.get(kind, 0) + 1
@@ -494,12 +505,16 @@ class DiskStore:
             t0 = time.perf_counter()
             data = None
             try:
-                if self._injector is not None:
-                    data = self._injector.read(
-                        lambda: self._read_block_raw(key, block),
-                        key, block, attempt)
-                else:
-                    data = self._read_block_raw(key, block)
+                with obs_session.trace_span(
+                        "disk.pread" if attempt == 0 else "disk.retry",
+                        array=key, block=int(block), attempt=attempt,
+                        batch=span_batch):
+                    if self._injector is not None:
+                        data = self._injector.read(
+                            lambda: self._read_block_raw(key, block),
+                            key, block, attempt)
+                    else:
+                        data = self._read_block_raw(key, block)
             except OSError as e:
                 last = e
                 note("io_errors")

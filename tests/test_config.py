@@ -14,10 +14,10 @@ import numpy as np
 import pytest
 
 from repro.core import (BackendSpec, CacheTierSpec, GNNConfig, GraphSAGE,
-                        Pipeline, PipelineSpec, PrefetchSpec, SamplerSpec,
-                        StoreSpec, add_pipeline_args, build_pipeline,
-                        build_train_step, make_loader, spec_from_args,
-                        train_loop)
+                        ObsSpec, Pipeline, PipelineSpec, PrefetchSpec,
+                        SamplerSpec, StoreSpec, add_pipeline_args,
+                        build_pipeline, build_train_step, make_loader,
+                        spec_from_args, train_loop)
 from repro.optim import adamw
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "data",
@@ -40,6 +40,9 @@ def rich_spec(**kw):
                           arrays=("features", "topology"))),
         prefetch=PrefetchSpec(depth=2, overlap=True, stage_depth=3,
                               plan_ahead=2),
+        obs=ObsSpec(enabled=True, trace_path="/tmp/trace.json",
+                    metrics_path="/tmp/metrics.jsonl",
+                    metrics_interval_s=2.5),
         batch_size=64, seed=0, engine="none")
     base.update(kw)
     return PipelineSpec(**base)
@@ -183,6 +186,30 @@ def test_cli_flags_parse_into_spec():
     assert dev.rows == 48 and dev.edge_blocks == 16
     assert dev.arrays == ("features", "topology")
     assert dev.policy == "lru"
+
+
+def test_cli_obs_flags_parse_into_spec(tmp_path):
+    spec = spec_from_args(_parse([
+        "--trace-out", str(tmp_path / "trace.json"),
+        "--metrics-out", str(tmp_path / "metrics.jsonl"),
+        "--metrics-interval", "0.5"]))
+    assert spec.obs.enabled                     # paths imply enabled
+    assert spec.obs.trace_path == str(tmp_path / "trace.json")
+    assert spec.obs.metrics_path == str(tmp_path / "metrics.jsonl")
+    assert spec.obs.metrics_interval_s == 0.5
+    # and the node round-trips like every other component
+    assert PipelineSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_obs_spec_validation():
+    with pytest.raises(ValueError, match="metrics_interval_s"):
+        ObsSpec(metrics_interval_s=0)
+    assert not ObsSpec().enabled                # default: telemetry off
+    assert ObsSpec(metrics_path="/tmp/m.jsonl").enabled
+    d = rich_spec().to_dict()
+    d["obs"]["span_depth"] = 3                  # unknown obs field
+    with pytest.raises(ValueError, match="unknown"):
+        PipelineSpec.from_dict(d)
 
 
 def test_cli_spec_file_with_overrides(tmp_path):

@@ -1,0 +1,319 @@
+"""Unified telemetry layer: registry thread-safety, stable histogram
+buckets, closed/ordered spans in the Perfetto export, associativity of
+snapshot merging, canonical-name mapping, and an end-to-end pipeline
+run proving telemetry files are produced without perturbing bits."""
+
+import json
+import threading
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import obs
+from repro.obs import names
+from repro.obs.metrics import (HIST_BUCKETS, HIST_EDGES, MetricsRegistry,
+                               bucket_index, idle_fraction, merge_snapshots)
+from repro.obs.tracer import SpanTracer
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_concurrent_increments_sum_exactly():
+    """Increments from >= 4 threads land exactly: per-thread shards mean
+    no lost updates, and the snapshot merge adds them all back up."""
+    reg = MetricsRegistry()
+    threads, per_thread = 6, 10_000
+
+    def worker(k):
+        for _ in range(per_thread):
+            reg.inc("store.requests")
+            reg.inc("store.bytes_fetched", 4096)
+            if k % 2 == 0:
+                reg.observe("pipeline.stage_latency_s", 1e-3)
+
+    ts = [threading.Thread(target=worker, args=(k,)) for k in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    snap = reg.snapshot()
+    assert snap["store.requests"] == threads * per_thread
+    assert snap["store.bytes_fetched"] == threads * per_thread * 4096
+    hist = snap["pipeline.stage_latency_s"]
+    assert hist["count"] == (threads // 2) * per_thread
+    assert sum(hist["buckets"]) == hist["count"]
+
+
+def test_histogram_bucket_edges_stable():
+    """Fixed log2 edges: data-independent, index computable, monotone."""
+    assert len(HIST_EDGES) == HIST_BUCKETS - 1
+    assert all(b == a * 2 for a, b in zip(HIST_EDGES, HIST_EDGES[1:]))
+    # same value -> same bucket regardless of registry/order/history
+    for v in (0.0, 1e-9, 2 ** -20, 1e-3, 0.5, 1.0, 1.5, 2.0, 1e6, 1e30):
+        i = bucket_index(v)
+        assert i == bucket_index(v)
+        assert 0 <= i < HIST_BUCKETS
+        if 0 < i < HIST_BUCKETS - 1:
+            assert HIST_EDGES[i - 1] <= v < HIST_EDGES[i]
+    # boundary values land in the bucket they open
+    assert bucket_index(HIST_EDGES[0]) == 1
+    assert bucket_index(HIST_EDGES[10]) == 11
+    # two registries observing the same stream agree bucket-for-bucket
+    a, b = MetricsRegistry(), MetricsRegistry()
+    vals = [1e-6, 3e-4, 0.02, 0.02, 7.0]
+    for v in vals:
+        a.observe("h", v)
+    for v in reversed(vals):
+        b.observe("h", v)
+    assert a.snapshot()["h"]["buckets"] == b.snapshot()["h"]["buckets"]
+
+
+@settings(max_examples=50)
+@given(st.lists(st.integers(0, 100), min_size=9, max_size=9))
+def test_merge_snapshots_associative(vals):
+    """(a + b) + c == a + (b + c) for counter and histogram entries."""
+    def mk(sub):
+        # integer-valued floats: addition is exact, so the float sums
+        # in the merged histograms are associative bit-for-bit
+        h = {"buckets": [0] * HIST_BUCKETS, "count": 0, "sum": 0.0}
+        for v in sub:
+            h["buckets"][bucket_index(float(v))] += 1
+            h["count"] += 1
+            h["sum"] += float(v)
+        return {"store.hits": sub[0], "store.misses": sub[1] * 2,
+                "lat": h}
+
+    a, b, c = mk(vals[0:3]), mk(vals[3:6]), mk(vals[6:9])
+    left = merge_snapshots(merge_snapshots(a, b), c)
+    right = merge_snapshots(a, merge_snapshots(b, c))
+    assert left == right
+    # commutative over numeric entries too
+    assert merge_snapshots(a, b) == merge_snapshots(b, a)
+
+
+def test_idle_fraction_shared_helper():
+    """The single copy both stats dataclasses delegate to."""
+    from repro.core.loader import RunStats
+    from repro.core.pipeline import PipelineStats
+    assert idle_fraction(0.0, 0.0) == 0.0
+    assert idle_fraction(1.0, 3.0) == 0.25
+    rs = RunStats(steps=4, idle_s=1.0, busy_s=3.0, wall_s=4.0)
+    ps = PipelineStats(batches=4, consumer_idle_s=1.0, consumer_busy_s=3.0)
+    assert rs.idle_fraction == ps.idle_fraction == 0.25
+
+
+# ---------------------------------------------------------------------------
+# span tracer + Perfetto export
+# ---------------------------------------------------------------------------
+
+def test_exported_spans_closed_and_ordered(tmp_path):
+    """Every exported span is a complete event (closed by construction)
+    and, per lane, timestamps are monotone with sibling spans
+    non-overlapping (nested spans must be contained)."""
+    tracer = SpanTracer()
+
+    def lane(name, n):
+        for i in range(n):
+            with tracer.span("work", {"batch": i, "lane": name}):
+                with tracer.span("inner", {"batch": i, "lane": name}):
+                    pass
+
+    ts = [threading.Thread(target=lane, args=(f"lane-{k}", 25))
+          for k in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+
+    path = tmp_path / "trace.json"
+    tracer.export(str(path))
+    trace = json.loads(path.read_text())
+    events = trace["traceEvents"]
+    spans = [e for e in events if e["ph"] == "X"]
+    metas = [e for e in events if e["ph"] == "M"]
+    assert {e["ph"] for e in events} <= {"X", "M"}      # all closed
+    assert len(spans) == 4 * 25 * 2
+    lanes = {m["args"]["name"] for m in metas}
+    assert lanes == {f"lane-{k}" for k in range(4)}
+    by_tid = {}
+    for e in spans:
+        assert e["dur"] >= 0 and e["ts"] >= 0
+        by_tid.setdefault(e["tid"], []).append(e)
+    for evs in by_tid.values():
+        evs.sort(key=lambda e: (e["ts"], -e["dur"]))
+        for prev, nxt in zip(evs, evs[1:]):
+            assert nxt["ts"] >= prev["ts"]              # monotone per lane
+            # non-overlapping: disjoint, or fully nested
+            disjoint = nxt["ts"] >= prev["ts"] + prev["dur"]
+            nested = nxt["ts"] + nxt["dur"] <= prev["ts"] + prev["dur"]
+            assert disjoint or nested, (prev, nxt)
+
+
+def test_trace_span_noop_when_uninstalled():
+    assert obs.active_session() is None
+    assert not obs.tracing()
+    span = obs.trace_span("anything", batch=0)
+    assert span is obs.NULL_SPAN                        # shared, no alloc
+    with span:
+        pass
+    obs.tick()                                          # no-op, no error
+
+
+def test_session_install_uninstall(tmp_path):
+    s = obs.ObsSession(trace_path=str(tmp_path / "t.json"),
+                       metrics_path=str(tmp_path / "m.jsonl"),
+                       metrics_interval_s=60.0)
+    obs.install(s)
+    try:
+        assert obs.tracing()
+        with obs.trace_span("step", batch=7, lane="consumer"):
+            obs.metric_inc("train.steps")
+    finally:
+        s.close()
+    assert not obs.tracing()                            # uninstalled
+    trace = json.loads((tmp_path / "t.json").read_text())
+    xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert len(xs) == 1 and xs[0]["name"] == "step"
+    assert xs[0]["args"]["batch"] == 7
+    lines = (tmp_path / "m.jsonl").read_text().splitlines()
+    assert lines, "final snapshot missing"
+    snap = json.loads(lines[-1])["metrics"]
+    assert snap["train.steps"] == 1
+    s.close()                                           # idempotent
+
+
+# ---------------------------------------------------------------------------
+# canonical names (satellite: counter-naming drift)
+# ---------------------------------------------------------------------------
+
+def test_canonical_names_single_source():
+    """The emitters' key tuples ARE the canonical table's leaves."""
+    from repro.storage.store import IOContext
+    assert IOContext.FAULT_KEYS == names.FAULT_KEYS
+    assert IOContext.KEYS == names.STORE_IO_KEYS + names.FAULT_KEYS
+    assert names.canonical("store", "hits") == "store.hits"
+    assert names.canonical("store", "retries") == "store.faults.retries"
+    assert names.canonical("devcache", "bytes_uploaded") == \
+        "devcache.bytes_uploaded"
+
+
+def test_legacy_key_compat_shim():
+    """Old BENCH comparison keys are recoverable from canonical names."""
+    assert names.legacy_key("store.faults.retries") == "retries"
+    assert names.legacy_key("devcache.hits") == "hits"
+    assert names.legacy_key("store.hit_rate") is None   # new metric
+    assert names.from_legacy("store", "io_errors") == \
+        "store.faults.io_errors"
+
+
+def test_flatten_stats_maps_tree_to_canonical():
+    stats = {
+        "store": {"requests": 10, "block_fetches": 4, "bytes_fetched": 8192,
+                  "hits": 6, "misses": 4, "evictions": 1, "retries": 2,
+                  "io_errors": 1, "short_reads": 0, "corrupt_blocks": 0,
+                  "timeouts": 0, "kind": "disk"},
+        "devcache": {"hits": 30, "misses": 10, "evictions": 5,
+                     "preload_rows": 8, "bytes_uploaded": 4096,
+                     "policy": "lru"},
+        "oracle": {"window": 4, "windows_built": 2, "batches_replayed": 8,
+                   "errors": 0, "timeouts": 0},
+        "lane_stall_restarts": 1, "lane_failures": 0, "prefetched": 12,
+        "degraded": False, "stage_s": {"sample": 0.5},
+    }
+    flat = names.flatten_stats(stats)
+    assert flat["store.requests"] == 10
+    assert flat["store.faults.retries"] == 2
+    assert flat["store.hit_rate"] == 0.6
+    assert flat["devcache.hit_rate"] == 0.75
+    assert flat["oracle.batches_replayed"] == 8
+    assert flat["pipeline.lane_stall_restarts"] == 1
+    assert flat["pipeline.degraded"] == 0
+    assert flat["pipeline.stage_s.sample"] == 0.5
+    assert "kind" not in json.dumps(list(flat))         # non-metrics dropped
+
+
+# ---------------------------------------------------------------------------
+# end to end: telemetry files from a real pipeline, bits unperturbed
+# ---------------------------------------------------------------------------
+
+def _run_spec(spec, g, steps=4):
+    import jax
+
+    from repro.core import (GNNConfig, GraphSAGE, build_pipeline,
+                            build_train_step, train_loop)
+    from repro.optim import adamw
+    losses = []
+    pipe = build_pipeline(spec, g)
+    try:
+        gnn = GraphSAGE(GNNConfig(feat_dim=g.feat_dim, hidden=16,
+                                  n_classes=int(g.labels.max()) + 1,
+                                  fanouts=spec.effective_fanouts))
+        opt = adamw(3e-3)
+        step = build_train_step(pipe, gnn, opt)
+        state = {"params": gnn.init(jax.random.key(0)), "opt": None,
+                 "step": 0}
+        state["opt"] = opt.init(state["params"])
+        state, _ = train_loop(
+            pipe, step, state, steps=steps,
+            on_step=lambda i, s, m: losses.append(float(m["loss"])))
+    finally:
+        pipe.close()
+    return losses
+
+
+def test_pipeline_telemetry_end_to_end(small_graph, tmp_path):
+    """A disk-backed pallas+devcache run with telemetry on writes a
+    Perfetto-loadable trace (pipeline/disk spans attributed to batches)
+    and JSONL snapshots with the per-tier counters — and its loss
+    trajectory is repr-identical to the telemetry-off twin."""
+    from repro.core.config import (BackendSpec, CacheTierSpec, ObsSpec,
+                                   PipelineSpec, PrefetchSpec, StoreSpec)
+    trace_path = tmp_path / "trace.json"
+    metrics_path = tmp_path / "metrics.jsonl"
+
+    def spec(obs_spec):
+        return PipelineSpec(
+            backend=BackendSpec(name="pallas"),
+            store=StoreSpec(kind="disk", path=str(tmp_path / "gs"),
+                            io_threads=2),
+            cache_tiers=(
+                CacheTierSpec(tier="host", policy="lru", capacity_mb=0.5,
+                              arrays=()),
+                CacheTierSpec.device(rows=48, policy="lru")),
+            prefetch=PrefetchSpec(depth=2, overlap=True, stage_depth=2),
+            batch_size=8, obs=obs_spec)
+
+    on = _run_spec(spec(ObsSpec(trace_path=str(trace_path),
+                                metrics_path=str(metrics_path),
+                                metrics_interval_s=0.05)), small_graph)
+    off = _run_spec(spec(ObsSpec()), small_graph)
+    assert [repr(x) for x in on] == [repr(x) for x in off]
+
+    trace = json.loads(trace_path.read_text())
+    spans = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    by_name = {}
+    for e in spans:
+        by_name.setdefault(e["name"], []).append(e)
+    # pipeline lanes + consumer + devcache + disk preads all present
+    for stage in ("sample", "resolve", "admit",
+                  "consume.step", "devcache.plan", "disk.pread"):
+        assert by_name.get(stage), f"no {stage} spans in {sorted(by_name)}"
+    lanes = {m["args"]["name"] for m in trace["traceEvents"]
+             if m["ph"] == "M"}
+    assert {"overlap-sample", "overlap-resolve", "overlap-admit",
+            "consumer"} <= lanes, lanes
+    # disk preads carry batch attribution inherited via IOContext
+    assert any(e.get("args", {}).get("batch") is not None
+               for e in by_name["disk.pread"])
+
+    lines = metrics_path.read_text().splitlines()
+    assert lines
+    snap = json.loads(lines[-1])["metrics"]
+    for k in ("store.hits", "store.misses", "store.bytes_fetched",
+              "store.hit_rate", "devcache.hit_rate",
+              "store.faults.retries"):
+        assert k in snap, (k, sorted(snap))
+    assert snap["store.bytes_fetched"] > 0
