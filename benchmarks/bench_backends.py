@@ -24,11 +24,27 @@ spec-generated flags assemble one ``PipelineSpec`` per row (built by
 files verbatim (``benchmarks/specs/*.json`` — what CI drives).  Every
 result row embeds the exact spec JSON that produced it.
 
-``--contention-workers N`` additionally runs the DiskStore contention
-micro-benchmark: N producer threads hammer the paged read path with the
-page-cache lock sharded vs. global, measuring multi-worker scaling.
-``--admission-bench`` adds devcache admission-overhead rows (batched
-numpy bookkeeping) at 10-100k unique rows/batch.
+``--contention-workers`` additionally runs the DiskStore contention
+micro-benchmark: producer threads hammer the paged read path with the
+page-cache lock sharded vs. global.  It accepts a single count, a comma
+list, or an inclusive range (``4-12`` / ``4-12:2``); each point is
+measured against the Fig. 17 engine contention model
+(``engines.throughput()``), so the JSON holds the measured and modelled
+scaling curves side by side.  ``--admission-bench`` adds devcache
+admission-overhead rows (batched numpy bookkeeping) at 10-100k unique
+rows/batch.
+
+``--wire-bench`` is the paper's headline figure: every ``host@disk``
+row gets an in-storage-processing twin (``StoreSpec.mode="isp"`` — the
+sampler runs inside a spawned storage-server process and only sampled
+bytes cross the wire), and the payload's ``wire_bench`` block compares
+bytes-over-the-wire against the host row's bytes-read-from-store,
+gated on bit-identical final loss.  Run it out-of-core
+(``--dataset reddit --large-scale`` with a small ``--cache-mb``) — with
+a warm page cache on a toy graph the raw-bytes side is artificially
+tiny and the inequality is meaningless.  ``--directio-calibrate``
+records the measured-pread calibration of the ``DirectIOEngine`` cost
+constants (``engines.calibrate_directio``).
 
 Run:  PYTHONPATH=src python benchmarks/bench_backends.py
 Emits BENCH_backends.json (the perf-trajectory seed) and prints one line
@@ -128,6 +144,99 @@ def contention_bench(store_dir: str, *, n_workers: int, batches: int,
             "global": global_lock, "sharded": sharded,
             "speedup": sharded["batches_per_s"]
             / max(global_lock["batches_per_s"], 1e-9)}
+
+
+def _parse_workers(text: str) -> list[int]:
+    """Worker counts from ``--contention-workers``: ``6``, ``4,8,12``,
+    or an inclusive range ``4-12`` / ``4-12:2`` (start-end[:step])."""
+    out: list[int] = []
+    for part in str(text).split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "-" in part:
+            span, _, step = part.partition(":")
+            a, b = span.split("-")
+            out.extend(range(int(a), int(b) + 1, int(step or 1)))
+        else:
+            out.append(int(part))
+    return [w for w in out if w > 0]
+
+
+def contention_model(g, workers: list[int], *, batch: int, fanouts,
+                     steps: int = 4, seed: int = 0) -> dict:
+    """The Fig. 17 contention model for the measured sweep: per-batch
+    cost of the ``mmap`` engine (the OS-page-cache device model standing
+    behind DiskStore's paged reads) replayed over real sampler traces,
+    pushed through ``engines.throughput()`` at each worker count.  The
+    absolute batches/s are device-model numbers, not this machine's —
+    compare the *scaling* curves (both normalised to the first worker
+    count)."""
+    import numpy as np
+
+    from repro.core import batch_targets, sample_khop
+    from repro.storage import engines as eng
+
+    engine = eng.make_engine("mmap", g)
+    costs = [engine.batch_cost(
+        sample_khop(g, batch_targets(g, i, batch, seed), fanouts,
+                    seed=seed + i)) for i in range(steps)]
+    resources = set().union(*[c.shared_demand for c in costs])
+    mean = eng.BatchCost(
+        "mmap", float(np.mean([c.time_s for c in costs])), 0, 0, {},
+        {r: float(np.mean([c.shared_demand.get(r, 0.0) for c in costs]))
+         for r in resources})
+    bps = {w: eng.throughput(mean, w) for w in workers}
+    base = max(bps[workers[0]], 1e-12)
+    return {"engine": "mmap", "batch_time_s": mean.time_s,
+            "batches_per_s": {str(w): bps[w] for w in workers},
+            "scaling": {str(w): bps[w] / base for w in workers}}
+
+
+def _wire_bench_report(results: dict) -> dict:
+    """Pair every isp-mode row with its local-mode disk twin and emit
+    the headline comparison: ISP wire bytes (request + reply frames, both
+    directions) vs the host row's bytes-read-from-store, plus the
+    storage-side raw bytes the server itself read from flash — gated on
+    bit-identical final loss."""
+    pairs = []
+    for row, r in results.items():
+        if (r["spec"]["store"].get("mode") or "local") != "isp":
+            continue
+        twin = next(
+            ((row2, r2) for row2, r2 in results.items()
+             if (r2["spec"]["store"].get("mode") or "local") == "local"
+             and r2["graph_store"] == "disk"
+             and r2["spec"]["backend"]["name"]
+             == r["spec"]["backend"]["name"]),
+            None)
+        if twin is None:
+            continue
+        host_row, host = twin
+        m, hm = r["metrics"], host["metrics"]
+        tx = int(m.get("isp.bytes_tx", 0))
+        rx = int(m.get("isp.bytes_rx", 0))
+        wire = tx + rx
+        host_raw = int(hm.get("store.bytes_fetched", 0))
+        server_raw = int(m.get("store.bytes_fetched", 0))
+        pairs.append({
+            "isp_row": row, "host_row": host_row,
+            "isp_bytes_tx": tx, "isp_bytes_rx": rx, "wire_bytes": wire,
+            "host_bytes_read": host_raw,
+            "isp_server_bytes_read": server_raw,
+            "wire_to_host_raw_ratio": wire / max(host_raw, 1),
+            "wire_lt_host_raw": wire < host_raw,
+            "wire_lt_server_raw": wire < server_raw,
+            "steps_per_s": {"isp": r["steps_per_s"],
+                            "host": host["steps_per_s"]},
+            "loss_bit_identical":
+                r["final_loss"] == host["final_loss"],
+        })
+    return {"pairs": pairs,
+            "all_bit_identical": all(p["loss_bit_identical"]
+                                     for p in pairs),
+            "all_wire_lt_host_raw": all(p["wire_lt_host_raw"]
+                                        for p in pairs)}
 
 
 def admission_bench(sizes=(10_000, 30_000, 100_000), *, rows: int = 32_768,
@@ -354,6 +463,10 @@ def _row_name(spec) -> str:
     """Result-row key encoding a spec's configuration, e.g.
     ``pallas@disk+devcache+edgecache``."""
     suffix = [spec.store.kind] if spec.store.kind != "mem" else []
+    if spec.store.mode == "isp":
+        suffix.append("isp")
+    if spec.store.direct_io:
+        suffix.append("directio")
     dev = spec.device_cache_tier()
     if dev is not None and "features" in dev.arrays:
         suffix.append("devcache")
@@ -395,12 +508,27 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--hidden", type=int, default=64)
-    ap.add_argument("--contention-workers", type=int, default=0,
+    ap.add_argument("--contention-workers", default="0",
                     help="run the DiskStore multi-producer contention "
-                         "micro-benchmark with this many threads "
-                         "(0 = skip; 4 matches the default producer pool)")
+                         "micro-benchmark: a thread count, comma list, or "
+                         "inclusive range 'a-b[:step]' (e.g. '4-12:2'); "
+                         "each point is measured against the Fig. 17 "
+                         "engine contention model (0 = skip)")
     ap.add_argument("--contention-batches", type=int, default=8,
                     help="batches per contention worker")
+    ap.add_argument("--wire-bench", action="store_true",
+                    help="add an isp-mode twin (in-storage sampling behind "
+                         "a spawned storage-server process) for every "
+                         "host@disk row and emit the headline "
+                         "bytes-over-wire comparison, gated bit-identical "
+                         "(payload key 'wire_bench'); run out-of-core — "
+                         "--dataset reddit --large-scale with a small "
+                         "--cache-mb — for a meaningful raw-bytes side")
+    ap.add_argument("--directio-calibrate", action="store_true",
+                    help="measure real pread latencies (O_DIRECT vs "
+                         "buffered) on the benched store and record the "
+                         "DirectIOEngine cost-constant calibration "
+                         "(payload key 'directio_calibration')")
     ap.add_argument("--admission-bench", action="store_true",
                     help="add devcache admission-overhead rows at 10-100k "
                          "unique rows/batch")
@@ -447,7 +575,7 @@ def main(argv=None):
                  "have mem, disk")
 
     def make_spec(backend: str, kind: str, with_devcache: bool,
-                  store_dir=None) -> PipelineSpec:
+                  store_dir=None, mode: str = "local") -> PipelineSpec:
         from repro.core.config import (BackendSpec, PrefetchSpec,
                                        SamplerSpec, StoreSpec)
         tiers = []
@@ -468,10 +596,19 @@ def main(argv=None):
             sampler=SamplerSpec(family=args.sampler, fanouts=args.fanouts,
                                 walk_length=args.walk_length),
             store=StoreSpec(kind=kind,
+                            mode=mode,
                             path=store_dir if store_dir is not None
                             else args.store_dir,
                             lock_shards=args.lock_shards,
-                            io_threads=args.io_threads),
+                            io_threads=args.io_threads,
+                            direct_io=bool(args.direct_io)
+                            if kind == "disk" else False,
+                            isp=dict(
+                                transport=args.isp_transport,
+                                address=args.isp_address,
+                                window=args.isp_window,
+                                server_cache=bool(args.isp_server_cache))
+                            if mode == "isp" else None),
             cache_tiers=tuple(tiers),
             prefetch=PrefetchSpec(depth=args.prefetch,
                                   overlap=bool(args.overlap),
@@ -479,6 +616,8 @@ def main(argv=None):
                                   plan_ahead=args.plan_ahead),
             batch_size=args.batch, seed=args.seed,
             engine=args.storage_engine)
+
+    contention_sweep = _parse_workers(args.contention_workers)
 
     specs: list[PipelineSpec] = []
     if args.spec:
@@ -491,6 +630,12 @@ def main(argv=None):
             ap.error(f"--spec files disagree on effective fanouts "
                      f"{sorted(shapes)}; one GNN serves all rows, so "
                      "bench them in separate runs")
+        if args.wire_bench:
+            modes = {s.store.mode for s in specs if s.store.kind == "disk"}
+            if modes < {"local", "isp"}:
+                ap.error("--wire-bench with --spec needs both a "
+                         "local-mode and an isp-mode disk spec in the "
+                         f"list (got modes {sorted(modes)})")
     else:
         has_device_cache = bool(args.device_cache_rows
                                 or args.edge_cache_blocks)
@@ -507,7 +652,12 @@ def main(argv=None):
                     # the full-upload baseline rides along, so one run
                     # holds both sides of the cached-vs-uploaded comparison
                     specs.append(make_spec(backend, kind, False))
-                specs.append(make_spec(backend, kind, dc))
+                # isp mode (in-storage sampling) applies to the host
+                # backend's disk rows — the device backends hold
+                # device-resident copies and never talk to the server
+                mode = (args.store_mode
+                        if kind == "disk" and backend == "host" else "local")
+                specs.append(make_spec(backend, kind, dc, mode=mode))
         if args.overlap_rows:
             import dataclasses as _dc
 
@@ -522,6 +672,30 @@ def main(argv=None):
                                           plan_ahead=args.plan_ahead))
                 for s in specs
                 if s.store.kind == "disk" or s.device_cache_tier()]
+        if args.wire_bench:
+            # one wire twin per host@disk row (sync rows only — the
+            # overlapped twins measure latency hiding, not wire bytes):
+            # whichever of local/isp mode the flags produced, add the other
+            import dataclasses as _dc
+
+            hostdisk = [s for s in specs
+                        if s.backend.name == "host"
+                        and s.store.kind == "disk"
+                        and not s.prefetch.overlap]
+            if not hostdisk:
+                ap.error("--wire-bench needs a host@disk row; include "
+                         "disk in --graph-store")
+            for s in hostdisk:
+                if s.store.mode == "local":
+                    store = _dc.replace(
+                        s.store, mode="isp",
+                        isp=dict(transport=args.isp_transport,
+                                 address=args.isp_address,
+                                 window=args.isp_window,
+                                 server_cache=bool(args.isp_server_cache)))
+                else:
+                    store = _dc.replace(s.store, mode="local", isp=None)
+                specs.append(s.replace(store=store))
 
     fanouts = specs[0].effective_fanouts if specs else args.fanouts
     g = load_dataset(args.dataset, large_scale=args.large_scale)
@@ -534,8 +708,8 @@ def main(argv=None):
 
     store_dir = None
     needs_disk = (any(s.store.kind == "disk" and s.store.path is None
-                      for s in specs) or args.contention_workers
-                  or args.policy_sweep)
+                      for s in specs) or contention_sweep
+                  or args.policy_sweep or args.directio_calibrate)
     if needs_disk:
         import atexit
         import shutil
@@ -642,17 +816,44 @@ def main(argv=None):
                   f"degraded={loader_stats['degraded']}")
 
     contention = None
-    if args.contention_workers:
-        contention = contention_bench(
-            store_dir, n_workers=args.contention_workers,
-            batches=args.contention_batches, batch=args.batch,
-            fanouts=fanouts, cache_mb=args.cache_mb,
-            policy=args.cache_policy, lock_shards=args.lock_shards)
-        print(f"bench_backends,{args.dataset},diskstore-contention,"
-              f"speedup,{contention['speedup']:.3g} "
-              f"({contention['workers']} workers, "
-              f"{contention['global']['batches_per_s']:.3g} -> "
-              f"{contention['sharded']['batches_per_s']:.3g} batches/s)")
+    if contention_sweep:
+        sweep_rows = []
+        for w in contention_sweep:
+            point = contention_bench(
+                store_dir, n_workers=w,
+                batches=args.contention_batches, batch=args.batch,
+                fanouts=fanouts, cache_mb=args.cache_mb,
+                policy=args.cache_policy, lock_shards=args.lock_shards)
+            sweep_rows.append(point)
+            print(f"bench_backends,{args.dataset},diskstore-contention,"
+                  f"workers,{w},speedup,{point['speedup']:.3g} "
+                  f"({point['global']['batches_per_s']:.3g} -> "
+                  f"{point['sharded']['batches_per_s']:.3g} batches/s)")
+        model = contention_model(g, contention_sweep, batch=args.batch,
+                                 fanouts=fanouts, seed=args.seed)
+        base = max(sweep_rows[0]["sharded"]["batches_per_s"], 1e-12)
+        measured_scaling = {str(p["workers"]):
+                            p["sharded"]["batches_per_s"] / base
+                            for p in sweep_rows}
+        for w in contention_sweep:
+            print(f"bench_backends,{args.dataset},contention-model,"
+                  f"workers,{w},"
+                  f"measured_scaling,{measured_scaling[str(w)]:.3g},"
+                  f"model_scaling,{model['scaling'][str(w)]:.3g}")
+        contention = {"workers": contention_sweep, "sweep": sweep_rows,
+                      "measured_scaling": measured_scaling,
+                      "model": model}
+
+    calibration = None
+    if args.directio_calibrate:
+        from repro.storage.engines import calibrate_directio
+        calibration = calibrate_directio(store_dir, seed=args.seed)
+        d = calibration["measured"]["direct"]
+        print(f"bench_backends,{args.dataset},directio-calibration,"
+              f"direct_mean_us,{d['mean_s'] * 1e6:.3g},"
+              f"direct_io_active,{int(d['direct_io_active'])},"
+              f"measured_over_model,"
+              f"{calibration['measured_over_model']:.3g}")
 
     admission = None
     if args.admission_bench:
@@ -692,8 +893,25 @@ def main(argv=None):
         "platform": platform.platform(),
         "results": results,
     }
+    if args.wire_bench:
+        wire = _wire_bench_report(results)
+        payload["wire_bench"] = wire
+        for p in wire["pairs"]:
+            print(f"bench_backends,{args.dataset},wire_bench,"
+                  f"{p['isp_row']},wire_bytes,{p['wire_bytes']},"
+                  f"host_bytes_read,{p['host_bytes_read']},"
+                  f"ratio,{p['wire_to_host_raw_ratio']:.3g},"
+                  f"bit_identical,{int(p['loss_bit_identical'])}")
+        if not wire["pairs"]:
+            print("bench_backends: wire_bench found no isp/local row "
+                  "pairs — check the spec list")
+        elif not wire["all_bit_identical"]:
+            print("bench_backends,WARNING,wire_bench,"
+                  "isp loss diverged from host twin")
     if contention is not None:
         payload["contention"] = contention
+    if calibration is not None:
+        payload["directio_calibration"] = calibration
     if admission is not None:
         payload["devcache_admission"] = admission
     if sweep is not None:

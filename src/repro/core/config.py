@@ -44,6 +44,8 @@ from repro.storage.specs import DEFAULT, RetrySpec
 BACKENDS = ("host", "isp", "pallas")
 SAMPLERS = ("khop", "saint")
 STORE_KINDS = ("mem", "disk")
+STORE_MODES = ("local", "isp")
+ISP_TRANSPORTS = ("unix", "tcp", "shm")
 CACHE_POLICIES = ("lru", "pinned", "optimal")
 CACHE_TIERS = ("host", "device")
 DEVICE_ARRAYS = ("features", "topology")
@@ -108,10 +110,46 @@ class SamplerSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class IspSpec:
+    """The in-storage-processing service (``store.mode='isp'``): how the
+    trainer reaches the storage *process* that owns the DiskStore.
+
+    ``transport`` picks the command-queue byte channel — ``unix`` socket
+    (default), ``tcp`` (``host:port``), or ``shm`` (two SPSC
+    shared-memory rings; one connection, no reconnect).  ``address=None``
+    derives a default from the store directory (``tcp`` needs an
+    explicit one).  ``window`` is the pipelined in-flight command budget.
+    ``server_cache=False`` shrinks the storage process's page cache to a
+    minimum so every block read hits the backing files — the
+    worst-case-wire configuration benchmarks compare against."""
+
+    transport: str = "unix"
+    address: str | None = None
+    window: int = 4
+    server_cache: bool = True
+
+    def __post_init__(self):
+        _check(self.transport, "store.isp.transport", ISP_TRANSPORTS)
+        if self.window < 1:
+            raise ValueError("store.isp.window must be >= 1")
+        object.__setattr__(self, "server_cache", bool(self.server_cache))
+
+
+@dataclasses.dataclass(frozen=True)
 class StoreSpec:
     """Where the graph arrays live: DRAM (``mem``) or the block-aligned
     on-disk DiskStore layout (``disk``).  ``path=None`` with ``disk``
     means a pipeline-owned temp directory.
+
+    ``mode`` says *who* serves the disk layout: ``local`` opens the
+    DiskStore in-process; ``isp`` spawns the in-storage processing
+    service (``repro.isp``) — a separate storage process owning the
+    store, reached over the ``isp`` command-queue protocol, with k-hop
+    sampling pushed down so only sampled bytes cross the wire.
+    ``direct_io`` opens the backing files ``O_DIRECT`` (bypassing the OS
+    page cache so the store's own cache tier is the only DRAM between
+    trainer and flash), falling back to buffered preads where the
+    filesystem refuses.
 
     The fault-tolerance surface rides here too: ``verify`` turns on
     per-block CRC32C verification of every disk read (the layout must
@@ -122,16 +160,35 @@ class StoreSpec:
     stay canonical)."""
 
     kind: str = "mem"
+    mode: str = "local"
     path: str | None = None
     block_bytes: int | None = None      # None = storage-spec default
     lock_shards: int | None = None      # None = storage-spec default
     io_threads: int | None = None       # None = storage-spec default (1)
     verify: bool = False
+    direct_io: bool = False
     retry: RetrySpec = RetrySpec()
     faults: FaultSpec | None = None
+    isp: IspSpec | None = None
 
     def __post_init__(self):
         _check(self.kind, "store.kind", STORE_KINDS)
+        _check(self.mode, "store.mode", STORE_MODES)
+        object.__setattr__(self, "direct_io", bool(self.direct_io))
+        isp = self.isp
+        if isinstance(isp, dict):
+            _reject_unknown(IspSpec, isp, "store.isp")
+            isp = IspSpec(**isp)
+        if self.mode == "isp":
+            if self.kind != "disk":
+                raise ValueError(
+                    "store.mode='isp' serves the on-disk layout from a "
+                    "storage process; it needs store.kind='disk'")
+            if isp is None:
+                isp = IspSpec()
+        else:
+            isp = None              # canonical form: isp config rides
+        object.__setattr__(self, "isp", isp)   # with isp mode only
         if self.block_bytes is not None and self.block_bytes < 512:
             raise ValueError("store.block_bytes must be >= 512")
         if self.lock_shards is not None and self.lock_shards < 1:
@@ -358,6 +415,19 @@ class PipelineSpec:
         if "host" in by_tier and self.store.kind != "disk":
             raise ValueError("a host cache tier fronts the on-disk layout; "
                              "it needs store.kind='disk'")
+        host = self.host_cache_tier()
+        if self.store.mode == "isp" and host is not None \
+                and host.policy == "optimal":
+            raise ValueError(
+                "store.mode='isp' cannot run the host tier's 'optimal' "
+                "policy: the Belady oracle lane replays the sampler "
+                "trainer-side, but the page cache lives in the storage "
+                "process; use 'lru' or 'pinned' (served server-side)")
+        if self.store.mode == "isp" and self.backend.name == "isp":
+            raise ValueError(
+                "backend 'isp' (device-mesh shards) never reads through a "
+                "store, so store.mode='isp' would spawn a storage process "
+                "nothing talks to; use the host or pallas backend")
         dev = self.device_cache_tier()
         if dev is not None and self.backend.name != "pallas":
             raise ValueError(
@@ -482,6 +552,11 @@ class Pipeline:
         s = self.spec
         bits = [f"backend={s.backend.name}", f"sampler={s.sampler.family}",
                 f"store={s.store.kind}"]
+        if s.store.mode == "isp":
+            bits.append(f"isp({s.store.isp.transport}, "
+                        f"window={s.store.isp.window})")
+        if s.store.direct_io:
+            bits.append("direct_io")
         if s.store.verify:
             bits.append("verify=crc32c")
         if s.store.faults is not None:
@@ -577,7 +652,6 @@ def build_pipeline(spec: PipelineSpec, graph_or_store=None, *, g=None,
                          "through the store; proceeding in-memory "
                          "(full-table upload)")
         else:
-            from repro.storage.store import open_store
             path = spec.store.path
             if path is None:
                 import tempfile
@@ -585,20 +659,26 @@ def build_pipeline(spec: PipelineSpec, graph_or_store=None, *, g=None,
                 path = tempfile.mkdtemp(prefix=f"graphstore-{name}-")
                 tmpdir = path
             host = spec.host_cache_tier()
-            store_kw = {}
-            if spec.store.lock_shards is not None:
-                store_kw["lock_shards"] = spec.store.lock_shards
-            if spec.store.io_threads is not None:
-                store_kw["io_threads"] = spec.store.io_threads
-            store_kw["verify"] = spec.store.verify
-            store_kw["retry"] = spec.store.retry
-            store_kw["faults"] = spec.store.faults
-            store = open_store("disk", g=g, path=path,
-                               block_bytes=spec.store.block_bytes,
-                               cache_mb=None if host is None
-                               else host.capacity_mb,
-                               policy=None if host is None else host.policy,
-                               **store_kw)
+            if spec.store.mode == "isp":
+                store = _open_isp_store(spec, g, path)
+            else:
+                from repro.storage.store import open_store
+                store_kw = {}
+                if spec.store.lock_shards is not None:
+                    store_kw["lock_shards"] = spec.store.lock_shards
+                if spec.store.io_threads is not None:
+                    store_kw["io_threads"] = spec.store.io_threads
+                store_kw["verify"] = spec.store.verify
+                store_kw["direct_io"] = spec.store.direct_io
+                store_kw["retry"] = spec.store.retry
+                store_kw["faults"] = spec.store.faults
+                store = open_store("disk", g=g, path=path,
+                                   block_bytes=spec.store.block_bytes,
+                                   cache_mb=None if host is None
+                                   else host.capacity_mb,
+                                   policy=None if host is None
+                                   else host.policy,
+                                   **store_kw)
             owns_store = True
 
     engine = None
@@ -633,6 +713,78 @@ def build_pipeline(spec: PipelineSpec, graph_or_store=None, *, g=None,
                     obs_session=obs_session)
     pipe.notes = notes
     return pipe
+
+
+def _open_isp_store(spec: PipelineSpec, g, path: str):
+    """Spawn the storage process over ``path`` and return the trainer's
+    ``RemoteGraphStore`` view of it.
+
+    The layout is serialized trainer-side first (the one-time ingest any
+    real device would also need); the server then *owns* the DiskStore —
+    page cache, retry/fault machinery and CRC verification all run in
+    the storage process, and only command replies cross the wire."""
+    from repro.isp.client import IspClient, RemoteGraphStore
+    from repro.isp.server import spawn_server
+    from repro.storage.store import MANIFEST, save_graph
+
+    if g is not None and not os.path.exists(os.path.join(path, MANIFEST)):
+        save_graph(g, path, block_bytes=spec.store.block_bytes)
+    isp = spec.store.isp
+    address = isp.address
+    if address is None:
+        if isp.transport == "unix":
+            address = os.path.join(path, ".isp.sock")
+        elif isp.transport == "shm":
+            address = f"isp-{os.getpid():x}"
+        else:
+            raise ValueError(
+                "store.isp.transport='tcp' needs an explicit "
+                "store.isp.address ('host:port')")
+    host = spec.host_cache_tier()
+    sstore: dict = {"path": path, "verify": spec.store.verify,
+                    "direct_io": spec.store.direct_io,
+                    "retry": dataclasses.asdict(spec.store.retry)}
+    if spec.store.lock_shards is not None:
+        sstore["lock_shards"] = spec.store.lock_shards
+    if spec.store.io_threads is not None:
+        sstore["io_threads"] = spec.store.io_threads
+    if spec.store.faults is not None:
+        sstore["faults"] = dataclasses.asdict(spec.store.faults)
+    if not isp.server_cache:
+        # worst-case-wire configuration: a nominal cache so (almost)
+        # every block read hits the backing files
+        sstore["cache_mb"] = 1.0
+    elif host is not None:
+        if host.capacity_mb is not None:
+            sstore["cache_mb"] = host.capacity_mb
+        sstore["policy"] = host.policy
+    config = {"transport": isp.transport, "address": address,
+              "store": sstore}
+    if spec.obs.enabled and (spec.obs.trace_path or spec.obs.metrics_path):
+        # the storage process writes its own telemetry next to the
+        # trainer's (same files would clobber each other)
+        config["obs"] = {
+            "trace_path": spec.obs.trace_path
+            and spec.obs.trace_path + ".isp",
+            "metrics_path": spec.obs.metrics_path
+            and spec.obs.metrics_path + ".isp",
+            "metrics_interval_s": spec.obs.metrics_interval_s}
+    proc = spawn_server(config)
+    try:
+        client = IspClient(isp.transport, address, window=isp.window)
+    except Exception:
+        proc.kill()
+        proc.wait(timeout=5.0)
+        raise
+    store = RemoteGraphStore(client, server_proc=proc)
+    if g is not None and (store.name, store.num_nodes, store.num_edges,
+                          store.feat_dim) != (g.name, g.num_nodes,
+                                              g.num_edges, g.feat_dim):
+        store.close()
+        raise ValueError(
+            f"{path} holds graph {store.name!r}, not {g.name!r}; point "
+            "--store-dir elsewhere or remove the stale layout")
+    return store
 
 
 # ---------------------------------------------------------------------------
@@ -694,6 +846,38 @@ FLAG_TABLE = {
     "--store-dir": ("store.path", dict(
         help="directory for the on-disk graph layout (default: a fresh "
              "temp dir; reused if it already holds a manifest)")),
+    "--store-mode": ("store.mode", dict(
+        choices=STORE_MODES,
+        help="who serves the disk layout: 'local' opens the DiskStore "
+             "in-process; 'isp' spawns the in-storage processing "
+             "service — a storage process owning the store, with k-hop "
+             "sample+gather pushed down so only sampled bytes cross "
+             "the wire")),
+    "--direct-io": ("store.direct_io", dict(
+        type=int, choices=(0, 1), metavar="0|1",
+        help="1 = open the disk store's backing files O_DIRECT (bypass "
+             "the OS page cache; aligned preads into a pooled buffer), "
+             "falling back to buffered reads where the filesystem "
+             "refuses")),
+    "--isp-transport": ("store.isp.transport", dict(
+        choices=ISP_TRANSPORTS,
+        help="isp mode: command-queue transport — unix socket (default), "
+             "tcp, or shm (two SPSC shared-memory rings; single "
+             "connection, no reconnect)")),
+    "--isp-address": ("store.isp.address", dict(
+        metavar="ADDR",
+        help="isp mode: transport address (unix: socket path; tcp: "
+             "host:port; shm: segment name prefix; default derives from "
+             "the store directory)")),
+    "--isp-window": ("store.isp.window", dict(
+        type=int,
+        help="isp mode: pipelined in-flight command window (concurrent "
+             "producer round-trips overlap instead of serializing)")),
+    "--isp-server-cache": ("store.isp.server_cache", dict(
+        type=int, choices=(0, 1), metavar="0|1",
+        help="isp mode: 1 = the storage process runs the host cache "
+             "tier's page-cache budget/policy; 0 = minimal server "
+             "cache, every read hits the backing files")),
     "--lock-shards": ("store.lock_shards", dict(
         type=int,
         help="disk-store page-cache lock shards (default: storage spec; "
@@ -821,9 +1005,11 @@ def _spec_defaults() -> dict:
             rows=0, edge_blocks=0,
             pinned_fraction=DEFAULT.devcache.pinned_fraction,
             arrays=("features",), oracle_window=0)
-        # faults is None in the canonical spec; the flag paths need a
-        # scratch dict to write through (all-zero normalizes back to None)
+        # faults/isp are None in the canonical spec; the flag paths need
+        # scratch dicts to write through (faults: all-zero normalizes
+        # back to None; isp: dropped unless store.mode is 'isp')
         d["store"]["faults"] = dataclasses.asdict(FaultSpec())
+        d["store"]["isp"] = dataclasses.asdict(IspSpec())
         _DEFAULT_SPEC = d
     return _DEFAULT_SPEC
 
@@ -901,10 +1087,13 @@ def spec_from_args(args) -> PipelineSpec:
         base = PipelineSpec.load(spec_path)
 
     tree = base.to_dict() if base is not None else PipelineSpec().to_dict()
-    # the faults flags need a dict to write through even when the base
-    # spec carries none (StoreSpec normalizes all-inactive back to None)
+    # the faults/isp flags need a dict to write through even when the
+    # base spec carries none (StoreSpec normalizes all-inactive faults —
+    # and any isp config outside isp mode — back to None)
     if tree["store"].get("faults") is None:
         tree["store"]["faults"] = dict(defaults["store"]["faults"])
+    if tree["store"].get("isp") is None:
+        tree["store"]["isp"] = dict(defaults["store"]["isp"])
     # scratch dicts for the two tiers, seeded from the base spec's tiers
     cache = dict(defaults["cache"])
     devcache = dict(defaults["devcache"])

@@ -68,7 +68,16 @@ def make_host_producer(store, batch_size: int, fanouts=DEFAULT_FANOUTS,
     tier serving the batch's access trace; the producer sleeps that long,
     so a slow simulated device shows up as consumer idle time exactly like
     the paper's Fig. 7 mismatch.
+
+    A store exposing ``sample_khop_pushdown`` (the in-storage processing
+    service's ``RemoteGraphStore``) gets the whole k-hop sample + gather
+    pushed down as one fused command: the storage process runs the
+    expansion against its local blocks and replies with the sampled
+    subgraph only — bit-identical to the host-side path at equal seeds,
+    with the batch's storage-side I/O bill riding back in the trace.
     """
+    pushdown = getattr(store, "sample_khop_pushdown", None) \
+        if sampler == "khop" else None
 
     def produce(batch_idx: int) -> Minibatch:
         # optimal-policy page cache: roll the Belady schedule forward
@@ -77,6 +86,14 @@ def make_host_producer(store, batch_size: int, fanouts=DEFAULT_FANOUTS,
         if adv is not None:
             adv(batch_idx)
         targets = batch_targets(store, batch_idx, batch_size, seed)
+        if pushdown is not None:
+            trace, hop_feats, labels = pushdown(targets, fanouts,
+                                                seed=seed + batch_idx)
+            if storage_cost_fn is not None:
+                time.sleep(storage_cost_fn(trace))
+            return Minibatch(targets=targets, hop_ids=list(trace.hops),
+                             hop_feats=hop_feats, labels=labels,
+                             trace=trace)
         io0 = _io_snapshot(store)
         if sampler == "saint":
             trace = saint_random_walk(store, targets, walk_length,

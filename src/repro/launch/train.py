@@ -131,7 +131,14 @@ def run_gnn(args, mesh):
         print(f"[train] {g.name}: {g.num_nodes} nodes {g.num_edges} edges, "
               f"{pipe.describe()}")
         store = pipe.store
-        if store is not None:
+        if store is not None and getattr(store, "kind", None) == "isp":
+            c = store.client
+            print(f"[train] graph store: in-storage processing service at "
+                  f"{c.kind}:{c.address} (pid "
+                  f"{store.server_proc.pid if store.server_proc else '-'}, "
+                  f"window={c.window}, block {store.block_bytes} B) — "
+                  "sample+gather pushed down to the storage process")
+        elif store is not None:
             print(f"[train] graph store: disk at {store.path} "
                   f"({store.nbytes_on_disk() / 2**20:.1f} MB on disk, "
                   f"page cache {store.cache_blocks} x {store.block_bytes} B "
@@ -210,6 +217,14 @@ def run_gnn(args, mesh):
                   f"({io['bytes_fetched'] / 2**20:.1f} MB from disk), "
                   f"cache hits={io['hits']} misses={io['misses']} "
                   f"evictions={io['evictions']}")
+            if getattr(store, "kind", None) == "isp":
+                w = store.isp_counters()
+                print(f"[train] isp wire: {w['requests']} commands, "
+                      f"{w['bytes_tx'] / 2**20:.2f} MB tx / "
+                      f"{w['bytes_rx'] / 2**20:.2f} MB rx "
+                      f"(vs {io['bytes_fetched'] / 2**20:.1f} MB read from "
+                      f"flash server-side), disconnects={w['disconnects']} "
+                      f"reconnects={w['reconnects']}")
             if pipe.engine is not None and hasattr(pipe.engine, "report"):
                 print(f"[train] measured-vs-simulated: {pipe.engine.report()}")
     finally:

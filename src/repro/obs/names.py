@@ -47,6 +47,12 @@ PIPELINE_KEYS = ("prefetched", "lane_failures", "lane_stall_restarts",
 #: Consumer-side training counters (RunStats / PipelineStats).
 TRAIN_KEYS = ("steps", "idle_s", "busy_s", "steps_per_s", "idle_fraction")
 
+#: In-storage-processing wire counters (``IspClient.counters`` /
+#: ``RemoteGraphStore.isp_counters()``) — both endpoints count frame
+#: bytes into the same names, plus the client's connection-health pair.
+ISP_KEYS = ("requests", "bytes_tx", "bytes_rx", "disconnects",
+            "reconnects")
+
 #: Cache tiers whose subtree in a loader ``stats()`` dict carries
 #: ``DEVCACHE_KEYS``-shaped counters.
 TIERS = ("devcache", "edgecache")
@@ -72,6 +78,7 @@ CANONICAL_NAMES: dict[str, tuple[str, ...]] = {
                 + ("devcache.hit_rate",),
     "edgecache": tuple(canonical("edgecache", k) for k in DEVCACHE_KEYS)
                  + ("edgecache.hit_rate",),
+    "isp": tuple(canonical("isp", k) for k in ISP_KEYS),
     "oracle": tuple(canonical("oracle", k) for k in ORACLE_KEYS),
     "pipeline": tuple(canonical("pipeline", k) for k in PIPELINE_KEYS)
                 + ("pipeline.degraded",),
@@ -129,6 +136,17 @@ def flatten_stats(stats: dict | None) -> dict[str, float]:
     if not stats:
         return out
     store = stats.get("store")
+    if isinstance(store, dict) and store.get("kind") == "isp":
+        # RemoteGraphStore.stats(): the trainer-side wire counters land
+        # under ``isp.*``; the storage process's own DiskStore stats ride
+        # in the "server" subtree and flatten onto ``store.*`` exactly
+        # like a local store would
+        isp = store.get("isp")
+        if isinstance(isp, dict):
+            for k in ISP_KEYS:
+                if k in isp:
+                    out[canonical("isp", k)] = isp[k]
+        store = store.get("server")
     if isinstance(store, dict):
         # the store block may be a full ``DiskStore.stats()`` (io
         # counters inlined) or a bare counter dict; either way the

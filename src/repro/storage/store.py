@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import contextlib
 import json
+import mmap
 import os
 import threading
 import time
@@ -57,6 +58,9 @@ FORMAT = "smartsage-graphstore"
 # budget (and a single pinning policy) spans all arrays
 _NS_STRIDE = 1 << 40
 _ARRAY_ORDER = ("indptr", "indices", "features", "labels")
+# O_DIRECT demands offset/length/buffer alignment to the device's logical
+# block size; 512 is the floor every Linux block device accepts
+_DIRECT_IO_ALIGN = 512
 
 
 @runtime_checkable
@@ -314,6 +318,7 @@ class DiskStore:
                  lock_shards: int | None = None,
                  io_threads: int | None = None,
                  verify: bool = False,
+                 direct_io: bool = False,
                  retry: RetrySpec | None = None,
                  faults: FaultSpec | None = None,
                  spec: SystemSpec = DEFAULT):
@@ -357,8 +362,8 @@ class DiskStore:
                     if k in self._arrays}
         self._dtype = {k: np.dtype(a["dtype"])
                        for k, a in self._arrays.items()}
-        self._fd = {k: os.open(os.path.join(path, a["file"]), os.O_RDONLY)
-                    for k, a in self._arrays.items()}
+        self._tls = threading.local()
+        self._open_backing_files(direct_io)
 
         # the CSR row index stays resident — it IS the index structure
         # (N+1 int64: a few MB even at the paper's billion-edge scale)
@@ -372,7 +377,6 @@ class DiskStore:
                                // self.block_bytes)
         self.cache_blocks = int(cache_blocks)
         self._stat_lock = threading.Lock()
-        self._tls = threading.local()
         self._requests = 0
         self._block_fetches = 0
         self._bytes_fetched = 0
@@ -461,7 +465,91 @@ class DiskStore:
         return (int(self.indptr[u]) * eb, int(self.indptr[u + 1]) * eb)
 
     # -- paged read path -----------------------------------------------------
+    def _open_backing_files(self, direct_io: bool) -> None:
+        """Open one fd per array, preferring ``O_DIRECT`` when asked: the
+        kernel page cache then stops double-buffering the store's own
+        page cache and every miss is a real device read (the latency the
+        ``DirectIOEngine`` cost model stands in for).  Falls back to
+        buffered reads — with one warning — when the platform lacks
+        O_DIRECT, the block size breaks the 512-byte alignment contract,
+        or the filesystem refuses the open/probe read (tmpfs does)."""
+
+        def open_all(extra_flags: int) -> dict:
+            return {k: os.open(os.path.join(self.path, a["file"]),
+                               os.O_RDONLY | extra_flags)
+                    for k, a in self._arrays.items()}
+
+        self.direct_io = False
+        reason = None
+        if direct_io:
+            o_direct = getattr(os, "O_DIRECT", None)
+            if o_direct is None:
+                reason = "platform has no O_DIRECT"
+            elif self.block_bytes % _DIRECT_IO_ALIGN:
+                reason = (f"block_bytes={self.block_bytes} is not "
+                          f"{_DIRECT_IO_ALIGN}-byte aligned")
+            else:
+                fds = None
+                try:
+                    fds = open_all(o_direct)
+                    self._fd = fds
+                    self.direct_io = True
+                    # probe: some filesystems accept the open and then
+                    # refuse the first aligned read
+                    self._read_block_direct(next(iter(fds)), 0)
+                except OSError as e:
+                    reason = str(e)
+                    self.direct_io = False
+                    for fd in (fds or {}).values():
+                        os.close(fd)
+            if reason is not None:
+                warnings.warn(
+                    f"direct_io requested but unavailable ({reason}); "
+                    "falling back to buffered preads", stacklevel=3)
+        if not self.direct_io:
+            self._fd = open_all(0)
+
+    def _aligned_buf(self) -> mmap.mmap:
+        """Per-thread page-aligned read buffer (mmap pages satisfy any
+        logical-block alignment) — O_DIRECT rejects unaligned user
+        memory."""
+        buf = getattr(self._tls, "dio_buf", None)
+        if buf is None:
+            buf = mmap.mmap(-1, self.block_bytes)
+            self._tls.dio_buf = buf
+        return buf
+
+    def _read_block_direct(self, key: str, block: int) -> bytes:
+        buf = self._aligned_buf()
+        n = os.preadv(self._fd[key], [buf], block * self.block_bytes)
+        return buf[:n]
+
+    def _degrade_direct(self, reason: str) -> None:
+        """Permanently fall back to buffered preads mid-run (a filesystem
+        that accepted the probe may still refuse a later read).  Racing
+        reads on the old fds surface as retryable ``io_errors``."""
+        with self._stat_lock:
+            if not self.direct_io:
+                return
+            self.direct_io = False
+            old = self._fd
+            self._fd = {k: os.open(os.path.join(self.path, a["file"]),
+                                   os.O_RDONLY)
+                        for k, a in self._arrays.items()}
+        for fd in old.values():
+            os.close(fd)
+        warnings.warn(f"direct_io read refused mid-run ({reason}); "
+                      "falling back to buffered preads", stacklevel=4)
+
     def _read_block_raw(self, key: str, block: int) -> bytes:
+        if self.direct_io:
+            try:
+                return self._read_block_direct(key, block)
+            except OSError as e:
+                import errno
+                if e.errno != errno.EINVAL:
+                    raise
+                self._degrade_direct(str(e))
         return os.pread(self._fd[key], self.block_bytes,
                         block * self.block_bytes)
 
@@ -996,6 +1084,7 @@ class DiskStore:
                 "lock_shards": self.lock_shards,
                 "io_threads": self.io_threads,
                 "verify": self.verify,
+                "direct_io": self.direct_io,
                 "nbytes_on_disk": self.nbytes_on_disk(),
                 "planner": dict(self._planner_ctx.counters(),
                                 warmed_nodes=self._warmed_nodes),
